@@ -1,0 +1,79 @@
+"""Figure 14: component ablation — zero-shot vs +healing vs +pre-exit vs
++speculative fine-grained query. Real retrieval accuracy (text->vision R@1
+relative to full MEM) x simulated 8GEN3 throughput."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import preexit as PE
+from repro.core import scheduler as SC
+from repro.models import imagebind as IB
+
+
+def spec_r1(q_full, corpus_coarse, corpus_full, k=10):
+    sims = q_full @ corpus_coarse.T
+    topk = np.argsort(-sims, axis=1)[:, :k]
+    hits = 0
+    for i in range(len(q_full)):
+        cand = topk[i]
+        if cand[np.argmax(q_full[i] @ corpus_full[cand].T)] == i:
+            hits += 1
+    return hits / len(q_full)
+
+
+def main():
+    params = C.train_mem()
+    lora, _ = C.healed_lora(params)
+    data = C.eval_data()
+    vis, txt = (jnp.asarray(data.items[m]) for m in ("vision", "text"))
+    exits = C.BENCH_RC.exit_layers(C.BENCH_CFG.tower("vision").n_layers)
+    L = C.BENCH_CFG.tower("vision").n_layers
+    q = np.asarray(IB.mem_embed(params, C.BENCH_CFG, C.BENCH_RC, "text", txt,
+                                **C.FW))
+
+    def corpora(lora_):
+        return np.asarray(IB.mem_embed_all_exits(
+            params, C.BENCH_CFG, C.BENCH_RC, "vision", vis, lora=lora_,
+            **C.FW)["exit_embs"])
+
+    v_zs, v_heal = corpora(None), corpora(lora)
+    full = v_heal[-1]
+    r1_full = C.retrieval_r_at_k(q, full, 1)
+
+    # per-variant (exit assignment, corpus, speculative?)
+    zs_labels, _, _ = C.exit_labels_and_sup(params, data)
+    heal_labels, sup, _ = C.exit_labels_and_sup(params, data, lora=lora)
+    predictor, _, _ = C.trained_predictor(params, lora=lora)
+    pred_idx = np.asarray(PE.predict_exit(predictor, jnp.asarray(sup),
+                                          n_exits=len(exits)))
+    n = len(q)
+    fixed = np.full(n, len(exits) // 2)
+    variants = {
+        "zero-shot fixed-exit (PE)": (v_zs, fixed, False),
+        "+healing (PE)": (v_heal, fixed, False),
+        "+pre-exit (PE)": (v_heal, pred_idx, False),
+        "+speculative query (full Recall)": (v_heal, pred_idx, True),
+    }
+    cost = SC.model_cost_from_tower(1280, 5120, 32, 257)
+    rows, out = [], {"r1_full": r1_full}
+    for name, (v, idx, spec) in variants.items():
+        corpus = v[idx, np.arange(n)]
+        r1 = (spec_r1(q, corpus, full) if spec
+              else C.retrieval_r_at_k(q, corpus, 1))
+        layers = np.clip((np.asarray(exits)[idx] * 32 / L).astype(int), 1, 32)
+        sim = SC.simulate_policy("recall", SC.GEN3, cost, layers, batch=32,
+                                 predicted_exits=layers)
+        rows.append([name, f"{r1:.3f}", f"{r1 / max(r1_full,1e-9):.3f}",
+                     f"{sim.throughput:.3f}"])
+        out[name] = {"r1": r1, "relative": r1 / max(r1_full, 1e-9),
+                     "throughput_8gen3": sim.throughput}
+    rows.append(["full MEM (upper bound)", f"{r1_full:.3f}", "1.000", "-"])
+    C.print_table("Fig 14 — ablation (accuracy x throughput)", rows,
+                  ["variant", "R@1", "relative", "8GEN3 items/s"])
+    C.save_json("fig14.json", out)
+
+
+if __name__ == "__main__":
+    main()

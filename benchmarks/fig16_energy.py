@@ -1,0 +1,48 @@
+"""Figure 16: normalized energy + peak memory per policy per device
+(cost-model; exit distributions measured from this run's models)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import preexit as PE
+from repro.core import scheduler as SC
+
+
+def main():
+    params = C.train_mem()
+    lora, _ = C.healed_lora(params)
+    data = C.eval_data()
+    exits = C.BENCH_RC.exit_layers(C.BENCH_CFG.tower("vision").n_layers)
+    L = C.BENCH_CFG.tower("vision").n_layers
+    zs, _, _ = C.exit_labels_and_sup(params, data)
+    _, sup, _ = C.exit_labels_and_sup(params, data, lora=lora)
+    predictor, _, _ = C.trained_predictor(params, lora=lora)
+    pred = np.asarray(PE.predict_exit(predictor, jnp.asarray(sup),
+                                      n_exits=len(exits)))
+    conf = np.clip((np.asarray(exits)[zs] * 32 / L).astype(int), 1, 32)
+    rec = np.clip((np.asarray(exits)[pred] * 32 / L).astype(int), 1, 32)
+    cost = SC.model_cost_from_tower(1280, 5120, 32, 257)
+    rows, out = [], {}
+    for dev_name, dev in SC.DEVICES.items():
+        res = SC.simulate_all(dev, cost, conf, rec, batch=32)
+        base = res["mem"].energy_per_item_j
+        for pol, r in res.items():
+            rows.append([dev_name, pol, f"{r.energy_per_item_j:.1f}",
+                         f"{r.energy_per_item_j / base:.3f}",
+                         f"{r.peak_mem_bytes/1e9:.2f}"])
+            out[f"{dev_name}/{pol}"] = {
+                "J_per_item": r.energy_per_item_j,
+                "normalized": r.energy_per_item_j / base,
+                "peak_gb": r.peak_mem_bytes / 1e9}
+    C.print_table("Fig 16 — energy & memory", rows,
+                  ["device", "policy", "J/item", "vs MEM", "peak GB"])
+    savings = {d: 1.0 / out[f"{d}/recall"]["normalized"] for d in SC.DEVICES}
+    print(f"energy savings recall vs mem: "
+          f"{ {k: round(v,1) for k,v in savings.items()} } (paper: 13.1x avg)")
+    C.save_json("fig16.json", out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""§Roofline report: aggregates launch/dryrun.py artifacts into the
+per-(arch x shape x mesh) table used by EXPERIMENTS.md."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+def load_artifacts():
+    out = []
+    for fn in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        with open(fn) as f:
+            out.append(json.load(f))
+    return out
+
+
+def fmt_ms(x):
+    return f"{x*1e3:.2f}"
+
+
+def table(arts, mesh="16x16"):
+    rows = []
+    for a in arts:
+        if a.get("mesh") != mesh:
+            continue
+        if a.get("status") == "skipped":
+            rows.append([a["arch"], a["shape"], "SKIP", "-", "-", "-", "-",
+                         "-", "-", "-"])
+            continue
+        r = a["roofline"]
+        mem = a["memory"]["peak_per_device"] / 2**30
+        rows.append([
+            a["arch"], a["shape"] + (f"+w{a['window']}" if a.get("window") else ""),
+            a["step"],
+            fmt_ms(r["compute_s"]), fmt_ms(r["memory_s"]),
+            fmt_ms(r["collective_s"]), r["bottleneck"],
+            f"{r['useful_ratio']:.2f}", f"{r['mfu_at_roofline']*100:.1f}%",
+            f"{mem:.2f}"])
+    return rows
+
+
+def table_multipod(arts):
+    """Multi-pod cells compile without depth probes (the roofline table is
+    single-pod only per the brief): report compile/memory/collective
+    schedule as the pod-axis shardability proof."""
+    rows = []
+    for a in arts:
+        if a.get("mesh") != "2x16x16":
+            continue
+        if a.get("status") == "skipped":
+            rows.append([a["arch"], a["shape"], "SKIP", "-", "-", "-"])
+            continue
+        c = a["collectives"]
+        mem = a["memory"]["peak_per_device"] / 2**30
+        counts = " ".join(f"{k.replace('collective-','c-')}:{v}"
+                          for k, v in sorted(c["counts"].items()))
+        rows.append([a["arch"], a["shape"], a["step"], f"{mem:.2f}",
+                     f"{a.get('compile_s', 0):.0f}s", counts])
+    return rows
+
+
+HEADERS = ["arch", "shape", "step", "compute ms", "memory ms", "coll ms",
+           "bottleneck", "useful", "MFU@roof", "GiB/dev"]
+HEADERS_MP = ["arch", "shape", "step", "GiB/dev", "compile", "collective schedule"]
+
+
+def main():
+    arts = load_artifacts()
+    if not arts:
+        print("no dry-run artifacts yet — run: "
+              "PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both")
+        return
+    from benchmarks.common import print_table
+    rows = table(arts, "16x16")
+    if rows:
+        print_table("Roofline — 16x16 (single pod, 256 chips)", rows, HEADERS)
+    rows = table_multipod(arts)
+    if rows:
+        print_table("Multi-pod dry-run — 2x16x16 (512 chips; pod-axis "
+                    "shardability proof)", rows, HEADERS_MP)
+    n_ok = sum(1 for a in arts if a.get("status") == "ok")
+    n_skip = sum(1 for a in arts if a.get("status") == "skipped")
+    print(f"\n{n_ok} compiled cells, {n_skip} documented skips")
+
+
+if __name__ == "__main__":
+    main()

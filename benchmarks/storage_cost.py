@@ -1,0 +1,36 @@
+"""§5.4 storage cost: measured bytes/item from the real store, extrapolated
+to the paper's 6000 images/day usage (vs Rewind's reported 14GB/month)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common as C
+from repro.core.store import EmbeddingStore
+
+
+def main():
+    rng = np.random.default_rng(0)
+    # paper-scale embeddings: 1024-d
+    st = EmbeddingStore(embed_dim=1024)
+    for i in range(256):
+        emb = rng.standard_normal(1024).astype(np.float32)
+        st.add(i, emb / np.linalg.norm(emb), exit_idx=2, exit_layer=12)
+    b = st.storage_bytes()
+    per_item = b["embeddings"] / len(st)
+    per_day = per_item * 6000
+    per_year = per_day * 365
+    rows = [
+        ["per item (int4 + scale)", f"{per_item:.0f} B"],
+        ["per day (6000 images)", f"{per_day/1e6:.1f} MB"],
+        ["per year", f"{per_year/1e9:.2f} GB"],
+        ["paper's estimate", "~29.3 MB/day, 10.4 GB/yr"],
+        ["Rewind (reported)", "14 GB/month"],
+    ]
+    C.print_table("§5.4 — storage cost", rows, ["quantity", "value"])
+    C.save_json("storage.json", {"per_item_bytes": per_item,
+                                 "per_day_mb": per_day / 1e6,
+                                 "per_year_gb": per_year / 1e9})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Table 2: embedding throughput x relative retrieval accuracy per policy
+per device. Accuracy: real trained bench-MEM retrieval (text->vision R@1
+relative to the full-sized model). Device seconds: calibrated cost model
+over the ImageBind-huge vision tower (the paper's workload), driven by the
+*measured* exit distributions of this run's models."""
+from __future__ import annotations
+
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import preexit as PE
+from repro.core import scheduler as SC
+from repro.models import imagebind as IB
+
+
+def relative_accuracy(params, lora, pred_exits_idx, exits, data) -> dict:
+    """R@1 of text->vision retrieval using per-item coarse embeddings at the
+    given exits (+ speculative refinement), relative to full-model R@1."""
+    vis = jnp.asarray(data.items["vision"])
+    txt = jnp.asarray(data.items["text"])
+    all_v = IB.mem_embed_all_exits(params, C.BENCH_CFG, C.BENCH_RC, "vision",
+                                   vis, lora=lora, **C.FW)
+    q_full = np.asarray(IB.mem_embed(params, C.BENCH_CFG, C.BENCH_RC, "text",
+                                     txt, **C.FW))
+    v_exits = np.asarray(all_v["exit_embs"])  # (n_exits, N, E)
+    n = v_exits.shape[1]
+    corpus_coarse = v_exits[pred_exits_idx, np.arange(n)]
+    corpus_full = v_exits[-1]
+    r1_full = C.retrieval_r_at_k(q_full, corpus_full, 1)
+    # speculative: coarse filter top-10 then fine match (refined embeddings)
+    sims = q_full @ corpus_coarse.T
+    top10 = np.argsort(-sims, axis=1)[:, :10]
+    hits = 0
+    for i in range(n):
+        cand = top10[i]
+        fine_scores = q_full[i] @ corpus_full[cand].T
+        if cand[np.argmax(fine_scores)] == i:
+            hits += 1
+    r1_spec = hits / n
+    return {"r1_full": r1_full, "r1_speculative": r1_spec,
+            "relative": r1_spec / max(r1_full, 1e-9)}
+
+
+def main():
+    params = C.train_mem()
+    lora, _ = C.healed_lora(params)
+    data = C.eval_data()
+    exits = C.BENCH_RC.exit_layers(C.BENCH_CFG.tower("vision").n_layers)
+
+    # measured exit distributions (this run's models)
+    zs_labels, _, _ = C.exit_labels_and_sup(params, data)          # zero-shot
+    healed_labels, sup, _ = C.exit_labels_and_sup(params, data, lora=lora)
+    predictor, pstats, _ = C.trained_predictor(params, lora=lora)
+    pred_idx = np.asarray(PE.predict_exit(predictor, jnp.asarray(sup),
+                                          n_exits=len(exits)))
+    to_layers = np.asarray(exits)
+    # scale measured exit fractions onto the paper's 32-layer vision tower
+    scale = 32 / C.BENCH_CFG.tower("vision").n_layers
+    conf_exits = np.clip((to_layers[zs_labels] * scale).astype(int), 1, 32)
+    recall_exits = np.clip((to_layers[pred_idx] * scale).astype(int), 1, 32)
+    cost = SC.model_cost_from_tower(1280, 5120, 32, 257)
+
+    acc = relative_accuracy(params, lora, pred_idx, exits, data)
+    rows = []
+    for dev_name, dev in SC.DEVICES.items():
+        res = SC.simulate_all(dev, cost, conf_exits, recall_exits, batch=32,
+                              superficial_layers=7)
+        for pol, r in res.items():
+            rel = {"mem": 1.0, "mem_batched": 1.0}.get(
+                pol, acc["relative"] if pol == "recall" else None)
+            rows.append([pol, dev_name, f"{r.throughput:.3f}",
+                         f"{r.energy_per_item_j:.1f}",
+                         f"{r.peak_mem_bytes/1e9:.2f}",
+                         f"{rel:.3f}" if rel is not None else "-",
+                         f"{r.layers_executed:.1f}"])
+    C.print_table("Table 2 — throughput vs relative accuracy",
+                  rows, ["policy", "device", "items/s", "J/item", "peakGB",
+                         "rel.acc", "avg layers"])
+    speed = {}
+    for dev_name, dev in SC.DEVICES.items():
+        res = SC.simulate_all(dev, cost, conf_exits, recall_exits, batch=32)
+        speed[dev_name] = res["recall"].throughput / res["mem"].throughput
+    print(f"\nrecall/mem speedup per device: "
+          f"{ {k: round(v,1) for k,v in speed.items()} } "
+          f"(paper: 14.9x avg); predictor acc {pstats['acc']:.2f}")
+    out = {"accuracy": acc, "speedup": speed, "predictor": pstats,
+           "exit_hist_zeroshot": np.bincount(zs_labels, minlength=len(exits)).tolist(),
+           "exit_hist_healed_pred": np.bincount(pred_idx, minlength=len(exits)).tolist()}
+    C.save_json("table2.json", out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,351 @@
+"""Config system: typed architecture/shape configs + global registry.
+
+Every assigned architecture gets one module in this package that calls
+:func:`register` with an :class:`ArchSpec`.  Shapes are first-class: each
+arch carries its own shape set so every (arch x shape) cell is well defined.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# Model-family configs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+
+
+@dataclass(frozen=True)
+class LMConfig:
+    """Decoder-style transformer (also used bidirectionally for encoders)."""
+
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int = 0  # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    moe: Optional[MoEConfig] = None
+    causal: bool = True
+    window: int = 0  # 0 = full attention; >0 = sliding window (extension)
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head if self.d_head else self.d_model // self.n_heads
+
+    @property
+    def n_params(self) -> int:
+        """Analytic parameter count (used for 6ND roofline terms)."""
+        d, h, kv, hd = self.d_model, self.n_heads, self.n_kv_heads, self.head_dim
+        attn = d * (h * hd) + 2 * d * (kv * hd) + (h * hd) * d
+        if self.moe is not None:
+            m = self.moe
+            ff_exp = 3 * d * m.d_ff_expert  # gate+up+down (SwiGLU)
+            ff = m.n_experts * ff_exp + m.n_shared_experts * ff_exp + d * m.n_experts
+        else:
+            ff = 3 * d * self.d_ff
+        per_layer = attn + ff + 2 * d  # two norms
+        embed = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + embed + d
+
+    @property
+    def n_active_params(self) -> int:
+        """Active params per token (MoE counts only routed top-k experts)."""
+        if self.moe is None:
+            return self.n_params
+        d = self.d_model
+        m = self.moe
+        ff_exp = 3 * d * m.d_ff_expert
+        attn = d * (self.n_heads * self.head_dim) + 2 * d * (self.n_kv_heads * self.head_dim) \
+            + (self.n_heads * self.head_dim) * d
+        per_layer = attn + (m.top_k + m.n_shared_experts) * ff_exp + d * m.n_experts + 2 * d
+        embed = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + embed + d
+
+
+@dataclass(frozen=True)
+class GNNConfig:
+    n_layers: int
+    d_hidden: int
+    aggregator: str = "gated"  # gatedgcn
+    d_feat: int = 128
+    d_edge_feat: int = 0
+    n_classes: int = 40
+    norm_eps: float = 1e-5
+    dtype: str = "float32"
+
+
+@dataclass(frozen=True)
+class RecsysConfig:
+    kind: str  # "bst" | "dlrm" | "sasrec" | "dien"
+    embed_dim: int
+    # Sparse feature tables: list of vocab sizes (one per field).
+    table_vocabs: Tuple[int, ...] = ()
+    n_dense: int = 0
+    seq_len: int = 0
+    item_vocab: int = 0
+    n_heads: int = 1
+    n_blocks: int = 0
+    bot_mlp: Tuple[int, ...] = ()
+    top_mlp: Tuple[int, ...] = ()
+    mlp: Tuple[int, ...] = ()
+    gru_dim: int = 0
+    interaction: str = "dot"
+    dtype: str = "float32"
+
+
+@dataclass(frozen=True)
+class TowerConfig:
+    """One MEM modality tower (transformer encoder on stub frontend tokens)."""
+
+    modality: str  # "vision" | "text" | "audio" | "imu"
+    n_layers: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    n_tokens: int  # sequence length after the (stub) frontend
+    d_input: int  # frontend feature dim (patch/frame/token-embedding dim)
+    vocab: int = 0  # text only
+
+
+@dataclass(frozen=True)
+class MEMConfig:
+    """ImageBind-style multimodal embedding model."""
+
+    towers: Tuple[TowerConfig, ...]
+    embed_dim: int = 1024
+    logit_scale_init: float = 14.285  # 1/0.07, CLIP default
+    norm_eps: float = 1e-6
+    dtype: str = "float32"
+
+    def tower(self, modality: str) -> TowerConfig:
+        for t in self.towers:
+            if t.modality == modality:
+                return t
+        raise KeyError(modality)
+
+
+# ---------------------------------------------------------------------------
+# Recall (paper technique) config
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class RecallConfig:
+    """Knobs for the paper's technique. Disabled wholesale if not applicable."""
+
+    enabled: bool = True
+    exit_interval: int = 4           # exit tap every k layers
+    superficial_layers: int = 7      # N in the paper (pre-exit reads layer-N state)
+    predictor_hidden: int = 256      # pre-exit MLP hidden width
+    lora_rank: int = 8
+    lora_alpha: float = 16.0
+    lora_targets: Tuple[str, ...] = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down")
+    plora_min_step: int = 1
+    plora_max_step: int = 4
+    filter_top_k: int = 10           # speculative filter width per granularity
+    query_granularities: int = 3     # how many exit depths to embed the query at
+    cache_bits: int = 4              # activation cache quantization
+    pool: str = "mean"               # how hidden states are pooled into embeddings
+
+    def exit_layers(self, n_layers: int) -> Tuple[int, ...]:
+        """1-indexed exit depths (always includes the final layer)."""
+        if not self.enabled:
+            return (n_layers,)
+        exits = list(range(self.exit_interval, n_layers, self.exit_interval))
+        if not exits or exits[-1] != n_layers:
+            exits.append(n_layers)
+        return tuple(exits)
+
+
+# ---------------------------------------------------------------------------
+# Shapes
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One benchmark cell: names the lowered step and its global dims."""
+
+    name: str
+    kind: str  # train | prefill | decode | serve | retrieval | graph_full | graph_mini
+    global_batch: int = 0
+    seq_len: int = 0
+    # GNN
+    n_nodes: int = 0
+    n_edges: int = 0
+    d_feat: int = 0
+    batch_nodes: int = 0
+    fanout: Tuple[int, ...] = ()
+    # recsys
+    n_candidates: int = 0
+    # flags
+    skip_reason: str = ""  # non-empty => cell is documented-skipped for this arch
+
+
+@dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    family: str  # "lm" | "gnn" | "recsys" | "mem"
+    model: Any  # LMConfig | GNNConfig | RecsysConfig | MEMConfig
+    shapes: Tuple[ShapeConfig, ...]
+    recall: RecallConfig = RecallConfig()
+    source: str = ""
+    notes: str = ""
+
+    def shape(self, name: str) -> ShapeConfig:
+        for s in self.shapes:
+            if s.name == name:
+                return s
+        raise KeyError(f"{self.arch_id}: no shape {name!r}")
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, ArchSpec] = {}
+
+_ARCH_MODULES = [
+    "qwen3_moe_30b_a3b",
+    "moonshot_v1_16b_a3b",
+    "minitron_8b",
+    "deepseek_67b",
+    "qwen2_1_5b",
+    "gatedgcn",
+    "bst",
+    "dlrm_mlperf",
+    "sasrec",
+    "dien",
+    "recall_imagebind",
+]
+
+
+def register(spec: ArchSpec) -> ArchSpec:
+    _REGISTRY[spec.arch_id] = spec
+    return spec
+
+
+def _ensure_loaded() -> None:
+    if len(_REGISTRY) >= len(_ARCH_MODULES):
+        return
+    for mod in _ARCH_MODULES:
+        importlib.import_module(f"repro.configs.{mod}")
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    _ensure_loaded()
+    key = arch_id.replace("_", "-")
+    if key in _REGISTRY:
+        return _REGISTRY[key]
+    if arch_id in _REGISTRY:
+        return _REGISTRY[arch_id]
+    raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_REGISTRY)}")
+
+
+def list_archs() -> List[str]:
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+def all_cells() -> List[Tuple[str, str]]:
+    """All (arch_id, shape_name) cells, including documented skips."""
+    _ensure_loaded()
+    return [(a, s.name) for a in list_archs() for s in _REGISTRY[a].shapes]
+
+
+# ---------------------------------------------------------------------------
+# Reduced ("smoke") configs: same family, tiny dims, runnable on 1 CPU device.
+# ---------------------------------------------------------------------------
+
+
+def smoke_variant(spec: ArchSpec) -> ArchSpec:
+    """Shrink a full config to a CPU-runnable reduced config of the same family."""
+    m = spec.model
+    if spec.family == "lm":
+        moe = None
+        if m.moe is not None:
+            moe = replace(m.moe, n_experts=4, top_k=2, d_ff_expert=64,
+                          n_shared_experts=min(m.moe.n_shared_experts, 1))
+        sm = replace(
+            m, n_layers=4, d_model=64, n_heads=4, n_kv_heads=min(m.n_kv_heads, 2),
+            d_head=16, d_ff=128, vocab=512, moe=moe, dtype="float32",
+        )
+        shapes = (ShapeConfig("smoke_train", "train", global_batch=4, seq_len=32),
+                  ShapeConfig("smoke_decode", "decode", global_batch=4, seq_len=64))
+        rc = replace(spec.recall, exit_interval=1, superficial_layers=1)
+    elif spec.family == "gnn":
+        sm = replace(m, n_layers=3, d_hidden=16, d_feat=8, n_classes=5)
+        shapes = (ShapeConfig("smoke_graph", "graph_full", n_nodes=64, n_edges=256, d_feat=8),)
+        rc = replace(spec.recall, exit_interval=1, superficial_layers=1)
+    elif spec.family == "recsys":
+        vocabs = tuple(min(v, 128) for v in m.table_vocabs) or ()
+        embed_dim = min(m.embed_dim, 16)
+        bot = tuple(min(x, 32) for x in m.bot_mlp)
+        if m.kind == "dlrm" and bot:
+            bot = bot[:-1] + (embed_dim,)  # DLRM invariant: bot out == embed
+        sm = replace(
+            m, embed_dim=embed_dim, table_vocabs=vocabs,
+            seq_len=min(m.seq_len, 8) if m.seq_len else 0,
+            item_vocab=min(m.item_vocab, 128) if m.item_vocab else 0,
+            bot_mlp=bot,
+            top_mlp=tuple(min(x, 32) for x in m.top_mlp),
+            mlp=tuple(min(x, 32) for x in m.mlp),
+            gru_dim=min(m.gru_dim, 16) if m.gru_dim else 0,
+        )
+        shapes = (ShapeConfig("smoke_train", "train", global_batch=16),
+                  ShapeConfig("smoke_serve", "serve", global_batch=8))
+        rc = spec.recall
+    elif spec.family == "mem":
+        towers = tuple(
+            replace(t, n_layers=3, d_model=32, n_heads=2, d_ff=64,
+                    n_tokens=min(t.n_tokens, 16), d_input=min(t.d_input, 24),
+                    vocab=min(t.vocab, 256) if t.vocab else 0)
+            for t in m.towers
+        )
+        sm = replace(m, towers=towers, embed_dim=32)
+        shapes = (ShapeConfig("smoke_embed", "serve", global_batch=8),)
+        rc = replace(spec.recall, exit_interval=1, superficial_layers=1)
+    else:
+        raise ValueError(spec.family)
+    return replace(spec, arch_id=spec.arch_id + "-smoke", model=sm, shapes=shapes, recall=rc)
+
+
+# Standard LM shape set used by every assigned LM arch -----------------------
+
+def lm_shapes(full_attention: bool) -> Tuple[ShapeConfig, ...]:
+    skip = ("pure full-attention arch: 524k-token context needs sub-quadratic "
+            "attention (see DESIGN.md §5); runnable via --window sliding-window extension"
+            ) if full_attention else ""
+    return (
+        ShapeConfig("train_4k", "train", global_batch=256, seq_len=4096),
+        ShapeConfig("prefill_32k", "prefill", global_batch=32, seq_len=32768),
+        ShapeConfig("decode_32k", "decode", global_batch=128, seq_len=32768),
+        ShapeConfig("long_500k", "decode", global_batch=1, seq_len=524288, skip_reason=skip),
+    )
+
+
+def recsys_shapes() -> Tuple[ShapeConfig, ...]:
+    return (
+        ShapeConfig("train_batch", "train", global_batch=65536),
+        ShapeConfig("serve_p99", "serve", global_batch=512),
+        ShapeConfig("serve_bulk", "serve", global_batch=262144),
+        ShapeConfig("retrieval_cand", "retrieval", global_batch=1, n_candidates=1_000_000),
+    )

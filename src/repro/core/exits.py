@@ -1,0 +1,50 @@
+"""Exit-label supervision (paper §3.2, "data-aware coarse-grained embedding
+granularity").
+
+The ground-truth exit for sample x is the *earliest* exit i whose coarse
+embedding C_x^i retrieves x's own fine-grained embedding F_x from the corpus
+(top-1 self-retrieval). Samples that never succeed get the final exit.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def self_retrieval_success(exit_embs: jax.Array, fine_embs: jax.Array) -> jax.Array:
+    """exit_embs (n_exits, N, E) coarse; fine_embs (N, E).
+    Returns (n_exits, N) bool: does C_x^i's nearest fine embedding == F_x?"""
+    sims = jnp.einsum("ine,me->inm", exit_embs.astype(jnp.float32),
+                      fine_embs.astype(jnp.float32))
+    nearest = jnp.argmax(sims, axis=-1)  # (n_exits, N)
+    return nearest == jnp.arange(exit_embs.shape[1])[None, :]
+
+
+def optimal_exit_labels(exit_embs: jax.Array, fine_embs: jax.Array) -> jax.Array:
+    """(N,) int32 index into the exit list: earliest self-retrieving exit."""
+    success = self_retrieval_success(exit_embs, fine_embs)  # (n_exits, N)
+    n_exits = exit_embs.shape[0]
+    first = jnp.argmax(success, axis=0)  # first True (or 0 if none)
+    any_ok = jnp.any(success, axis=0)
+    return jnp.where(any_ok, first, n_exits - 1).astype(jnp.int32)
+
+
+def exit_histogram(labels: jax.Array, n_exits: int) -> jax.Array:
+    return jnp.bincount(labels, length=n_exits)
+
+
+def mean_exit_depth(labels: jax.Array, exits: Tuple[int, ...]) -> jax.Array:
+    depths = jnp.asarray(exits, jnp.float32)
+    return jnp.mean(depths[labels])
+
+
+def retrieval_at_k(query_embs: jax.Array, corpus_embs: jax.Array,
+                   targets: jax.Array, k: int = 1) -> jax.Array:
+    """R@k: fraction of queries whose target is in the top-k corpus matches.
+    query_embs (Q, E); corpus_embs (M, E); targets (Q,) int."""
+    sims = query_embs.astype(jnp.float32) @ corpus_embs.astype(jnp.float32).T
+    _, idx = jax.lax.top_k(sims, k)  # (Q, k)
+    return jnp.mean(jnp.any(idx == targets[:, None], axis=-1).astype(jnp.float32))

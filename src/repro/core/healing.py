@@ -1,0 +1,172 @@
+"""Progressive LoRA healing loop (paper §3.3).
+
+Distills the frozen full-depth ("fine-grained") embedding into every exit's
+coarse embedding through a single shared LoRA suite, tuned progressively:
+phase p trains only the LoRA of layers in its step window (earlier layers
+frozen via gradient masks), walking from shallow exits to deep ones. The
+step schedule comes from the predicted-exit histogram pivot
+(:func:`repro.core.plora.schedule_steps`).
+
+The exit head stays untuned (paper §3.3 "Training Details") so refined and
+coarse embeddings share one output space.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import MEMConfig, RecallConfig
+from repro.core import plora
+from repro.models import imagebind as IB
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.optim.adamw import AdamW
+
+
+def cosine_distill_loss(coarse: jax.Array, fine: jax.Array) -> jax.Array:
+    """1 - cos(coarse, fine); both (..., E), fine is stop-gradient'd."""
+    fine = jax.lax.stop_gradient(fine)
+    cos = jnp.sum(coarse.astype(jnp.float32) * fine.astype(jnp.float32), axis=-1)
+    return jnp.mean(1.0 - cos)
+
+
+@dataclasses.dataclass
+class HealConfig:
+    lr: float = 1e-3
+    steps_per_phase: int = 30
+    batch: int = 64
+    weight_decay: float = 0.0
+    exit_weight_floor: float = 0.1  # min weight for exits with few samples
+
+
+def heal_tower(key, params, mem_cfg: MEMConfig, recall: RecallConfig,
+               modality: str, data: jax.Array, *,
+               exit_hist: Optional[np.ndarray] = None,
+               heal_cfg: HealConfig = HealConfig(),
+               fw_kw: Optional[dict] = None) -> Tuple[dict, List[dict]]:
+    """Heal one MEM tower. ``data``: (N, ...) modality inputs.
+
+    Returns (lora_params, phase_log)."""
+    fw_kw = fw_kw or {}
+    t = mem_cfg.tower(modality)
+    tcfg = IB.tower_lm_cfg(t, mem_cfg)
+    exits = recall.exit_layers(t.n_layers)
+    n_exits = len(exits)
+    if exit_hist is None:
+        exit_hist = np.ones(n_exits)
+    steps = plora.schedule_steps(exit_hist, recall)
+    phases = plora.plora_phases(exits, steps)
+    lora = plora.lora_init(key, tcfg, recall)
+    opt = AdamW(lr=heal_cfg.lr, weight_decay=heal_cfg.weight_decay, clip_norm=1.0)
+
+    # Exit weights from the predicted-exit histogram (prioritize where mass is).
+    w = np.maximum(np.asarray(exit_hist, np.float64), 0)
+    w = w / max(w.sum(), 1e-9) + heal_cfg.exit_weight_floor
+    exit_w = jnp.asarray(w / w.sum(), jnp.float32)
+    exit_idx = jnp.asarray([e - 1 for e in exits])
+
+    # Distillation targets: the *frozen* zero-shot fine-grained embeddings
+    # (paper §3.3 "the training objective is the fine-grained embedding") —
+    # precomputed once; a moving (LoRA-dependent) target lets the optimizer
+    # drift the whole embedding space.
+    targets = IB.mem_embed(params, mem_cfg, recall, modality, data,
+                           lora=None, **fw_kw)
+    targets = jax.lax.stop_gradient(targets)
+
+    def loss_fn(lora_p, batch_x, batch_t, phase_exit_mask):
+        out = IB.tower_forward(params, mem_cfg, recall, modality, batch_x,
+                               lora=lora_p, **fw_kw)
+        tp = params["towers"][modality]
+        embs = T.exit_embedding(tp, out["pooled"][exit_idx], mem_cfg.norm_eps)
+        per_exit = jax.vmap(lambda c: 1.0 - jnp.mean(jnp.sum(
+            c.astype(jnp.float32) * batch_t.astype(jnp.float32),
+            axis=-1)))(embs)
+        wts = exit_w * phase_exit_mask
+        return jnp.sum(per_exit * wts) / jnp.maximum(jnp.sum(wts), 1e-9)
+
+    @jax.jit
+    def train_step(lora_p, state, x, t, pmask, gmask):
+        loss, grads = jax.value_and_grad(loss_fn)(lora_p, x, t, pmask)
+        lora_p, state, m = opt.update(grads, state, lora_p, grad_mask=gmask)
+        return lora_p, state, loss
+
+    log = []
+    n = data.shape[0]
+    rng = np.random.default_rng(0)
+    state = opt.init(lora)
+    for p_i, (lo, hi) in enumerate(phases):
+        mask = plora.window_mask(lora, lo, hi)
+        phase_exit_mask = jnp.asarray(
+            [1.0 if lo < e <= hi else 0.0 for e in exits], jnp.float32)
+        losses = []
+        for s in range(heal_cfg.steps_per_phase):
+            idx = jnp.asarray(rng.integers(0, n, size=min(heal_cfg.batch, n)))
+            lora, state, loss = train_step(lora, state, data[idx],
+                                           targets[idx], phase_exit_mask, mask)
+            losses.append(float(loss))
+        log.append({"phase": p_i, "window": (lo, hi),
+                    "loss_first": losses[0], "loss_last": losses[-1]})
+    return lora, log
+
+
+def heal_lm(key, params, cfg, recall: RecallConfig, tokens: jax.Array, *,
+            heal_cfg: HealConfig = HealConfig(),
+            exit_hist: Optional[np.ndarray] = None,
+            fw_kw: Optional[dict] = None) -> Tuple[dict, List[dict]]:
+    """Heal an LM used as an embedder (assigned LM archs): distill the
+    full-depth pooled embedding into each exit."""
+    fw_kw = fw_kw or {}
+    exits = recall.exit_layers(cfg.n_layers)
+    n_exits = len(exits)
+    if exit_hist is None:
+        exit_hist = np.ones(n_exits)
+    steps = plora.schedule_steps(exit_hist, recall)
+    phases = plora.plora_phases(exits, steps)
+    lora = plora.lora_init(key, cfg, recall)
+    opt = AdamW(lr=heal_cfg.lr, weight_decay=heal_cfg.weight_decay, clip_norm=1.0)
+    exit_idx = jnp.asarray([e - 1 for e in exits])
+    w = np.maximum(np.asarray(exit_hist, np.float64), 0)
+    w = w / max(w.sum(), 1e-9) + heal_cfg.exit_weight_floor
+    exit_w = jnp.asarray(w / w.sum(), jnp.float32)
+
+    # frozen zero-shot fine-grained targets (see heal_tower)
+    out0 = T.forward_hidden(params, cfg, recall, tokens=tokens,
+                            collect_pooled=True, **fw_kw)
+    targets = jax.lax.stop_gradient(
+        T.exit_embedding(params, out0["pooled"][-1], cfg.norm_eps))
+
+    def loss_fn(lora_p, toks, t, pmask):
+        out = T.forward_hidden(params, cfg, recall, tokens=toks, lora=lora_p,
+                               collect_pooled=True, **fw_kw)
+        embs = T.exit_embedding(params, out["pooled"][exit_idx], cfg.norm_eps)
+        per_exit = jax.vmap(lambda c: 1.0 - jnp.mean(jnp.sum(
+            c.astype(jnp.float32) * t.astype(jnp.float32), axis=-1)))(embs)
+        wts = exit_w * pmask
+        return jnp.sum(per_exit * wts) / jnp.maximum(jnp.sum(wts), 1e-9)
+
+    @jax.jit
+    def train_step(lora_p, state, toks, t, pmask, gmask):
+        loss, grads = jax.value_and_grad(loss_fn)(lora_p, toks, t, pmask)
+        lora_p, state, _ = opt.update(grads, state, lora_p, grad_mask=gmask)
+        return lora_p, state, loss
+
+    state = opt.init(lora)
+    rng = np.random.default_rng(0)
+    log = []
+    n = tokens.shape[0]
+    for p_i, (lo, hi) in enumerate(phases):
+        gmask = plora.window_mask(lora, lo, hi)
+        pmask = jnp.asarray([1.0 if lo < e <= hi else 0.0 for e in exits], jnp.float32)
+        losses = []
+        for s in range(heal_cfg.steps_per_phase):
+            idx = jnp.asarray(rng.integers(0, n, size=min(heal_cfg.batch, n)))
+            lora, state, loss = train_step(lora, state, tokens[idx],
+                                           targets[idx], pmask, gmask)
+            losses.append(float(loss))
+        log.append({"phase": p_i, "window": (lo, hi),
+                    "loss_first": losses[0], "loss_last": losses[-1]})
+    return lora, log

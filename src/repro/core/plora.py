@@ -1,0 +1,149 @@
+"""Progressive LoRA healing (paper §3.3).
+
+One *shared* LoRA suite serves every exit (vs. one suite per exit in naive
+exit-healing): LoRA for layers [0, e) is exactly the prefix of the suite used
+by exit e+1, so layer-n activations are reusable when continuing to layer
+n+1 — the property §3.4's cached refinement depends on (verified exactly in
+tests/test_plora.py).
+
+Progressive tuning: exits are healed in increasing order; at each phase only
+the LoRA of layers inside the current *step window* receives gradients
+(earlier layers stay frozen). The step size grows for deeper exits per the
+pivot rule driven by the predicted-exit histogram.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LMConfig, RecallConfig
+from repro.models import layers as L
+from repro.models.layers import ParamDef, Schema
+
+
+def lora_schema(cfg: LMConfig, recall: RecallConfig) -> Schema:
+    """Stacked (n_layers leading dim) LoRA params for the configured targets.
+    B ("b") matrices start at zero => identity behaviour at init."""
+    Ld = (cfg.n_layers,)
+    la = ("layer",)
+    r = recall.lora_rank
+    d, H, KV, hd, f = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                       cfg.d_ff)
+    defs = {
+        "wq": (ParamDef(Ld + (d, r), la + ("embed", None), "fan_in"),
+               ParamDef(Ld + (r, H, hd), la + (None, "heads", "head_dim"), "zeros")),
+        "wk": (ParamDef(Ld + (d, r), la + ("embed", None), "fan_in"),
+               ParamDef(Ld + (r, KV, hd), la + (None, "kv_heads", "head_dim"), "zeros")),
+        "wv": (ParamDef(Ld + (d, r), la + ("embed", None), "fan_in"),
+               ParamDef(Ld + (r, KV, hd), la + (None, "kv_heads", "head_dim"), "zeros")),
+        "wo": (ParamDef(Ld + (H, hd, r), la + ("heads", "head_dim", None), "fan_in"),
+               ParamDef(Ld + (r, d), la + (None, "embed"), "zeros")),
+    }
+    if cfg.moe is None and f:
+        defs.update({
+            "w_gate": (ParamDef(Ld + (d, r), la + ("embed", None), "fan_in"),
+                       ParamDef(Ld + (r, f), la + (None, "mlp"), "zeros")),
+            "w_up": (ParamDef(Ld + (d, r), la + ("embed", None), "fan_in"),
+                     ParamDef(Ld + (r, f), la + (None, "mlp"), "zeros")),
+            "w_down": (ParamDef(Ld + (f, r), la + ("mlp", None), "fan_in"),
+                       ParamDef(Ld + (r, d), la + (None, "embed"), "zeros")),
+        })
+    return {t: {"a": a, "b": b} for t, (a, b) in defs.items()
+            if t in recall.lora_targets}
+
+
+def lora_init(key, cfg: LMConfig, recall: RecallConfig, dtype=jnp.float32):
+    return L.init_params(key, lora_schema(cfg, recall), dtype=dtype)
+
+
+def lora_specs(cfg: LMConfig, recall: RecallConfig):
+    return L.param_specs(lora_schema(cfg, recall))
+
+
+def lora_n_params(cfg: LMConfig, recall: RecallConfig) -> int:
+    return sum(int(np.prod(d.shape)) for pair in lora_schema(cfg, recall).values()
+               for d in jax.tree.leaves(pair, is_leaf=lambda x: isinstance(x, ParamDef)))
+
+
+# ---------------------------------------------------------------------------
+# Progressive window machinery
+# ---------------------------------------------------------------------------
+
+
+def window_mask(lora, lo: int, hi: int):
+    """0/1 mask pytree: 1 for layers in [lo, hi) — only they receive grads."""
+    def mk(p):
+        idx = jnp.arange(p.shape[0])
+        m = ((idx >= lo) & (idx < hi)).astype(jnp.float32)
+        return m.reshape((-1,) + (1,) * (p.ndim - 1))
+    return jax.tree.map(mk, lora)
+
+
+def plora_phases(exits: Sequence[int], steps: Sequence[int]) -> List[Tuple[int, int]]:
+    """Per healing phase: (layer_lo, layer_hi) windows that tile [0, L).
+    ``steps[i]`` = how many exits are healed jointly in phase i."""
+    phases = []
+    i = 0
+    prev_layer = 0
+    while i < len(exits):
+        step = steps[min(len(phases), len(steps) - 1)]
+        j = min(i + step, len(exits))
+        phases.append((prev_layer, exits[j - 1]))
+        prev_layer = exits[j - 1]
+        i = j
+    return phases
+
+
+def schedule_steps(exit_hist: np.ndarray, recall: RecallConfig) -> List[int]:
+    """P-LoRA step decision (paper §3.3): put the pivot at the histogram mass
+    centre — exits at/before the pivot heal with the min step (fine-grained
+    healing where most samples exit), later exits use progressively larger
+    steps (their features are already strong)."""
+    h = np.asarray(exit_hist, np.float64)
+    n = len(h)
+    if h.sum() <= 0:
+        pivot = 0
+    else:
+        cum = np.cumsum(h) / h.sum()
+        pivot = int(np.searchsorted(cum, 0.5))
+    steps = []
+    i = 0
+    while i < n:
+        if i <= pivot:
+            s = recall.plora_min_step
+        else:
+            # grow linearly up to max_step past the pivot
+            s = min(recall.plora_min_step + (i - pivot), recall.plora_max_step)
+        steps.append(s)
+        i += s
+    return steps
+
+
+def merge_lora(params: Schema, lora, recall: RecallConfig) -> Schema:
+    """Fold LoRA deltas into base weights (deployment-time merge)."""
+    scale = recall.lora_alpha / recall.lora_rank
+    out = jax.tree.map(lambda x: x, params)  # shallow copy
+    attn = dict(out["layers"]["attn"])
+    mlp = dict(out["layers"].get("mlp", {}))
+    for t, ab in lora.items():
+        a, b = ab["a"].astype(jnp.float32), ab["b"].astype(jnp.float32)
+        if t in ("wq", "wk", "wv"):
+            delta = jnp.einsum("ldr,lrhk->ldhk", a, b) * scale
+            attn[t] = (attn[t].astype(jnp.float32) + delta).astype(attn[t].dtype)
+        elif t == "wo":
+            delta = jnp.einsum("lhkr,lrd->lhkd", a, b) * scale
+            attn[t] = (attn[t].astype(jnp.float32) + delta).astype(attn[t].dtype)
+        elif t in ("w_gate", "w_up", "w_down"):
+            delta = jnp.einsum("ldr,lrf->ldf", a, b) * scale
+            mlp[t] = (mlp[t].astype(jnp.float32) + delta).astype(mlp[t].dtype)
+    layers = dict(out["layers"])
+    layers["attn"] = attn
+    if mlp:
+        layers["mlp"] = mlp
+    out = dict(out)
+    out["layers"] = layers
+    return out

@@ -1,0 +1,48 @@
+"""INT4 activation/embedding quantization (paper §3.4 cache analysis).
+
+Per-row absmax scaling, two nibbles packed per int8 (TPU has no int4 compute
+path — int4 here is a *storage* format; dequant happens in VMEM, see
+repro.kernels.int4_cache). Pure-jnp reference lives here; it is also the
+oracle for the Pallas kernel.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int4(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x (..., D) with D even -> (packed (..., D//2) int8, scale (..., 1) f32)."""
+    assert x.shape[-1] % 2 == 0, x.shape
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / 7.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xf / scale), -8, 7).astype(jnp.int8)
+    lo, hi = q[..., 0::2], q[..., 1::2]
+    packed = (lo & jnp.int8(0x0F)) | (hi << 4)
+    return packed, scale
+
+
+def dequantize_int4(packed: jax.Array, scale: jax.Array,
+                    dtype=jnp.float32) -> jax.Array:
+    """Inverse of quantize_int4: (..., D//2) int8 -> (..., D)."""
+    lo = (packed << 4) >> 4  # sign-extend low nibble (arithmetic shift on int8)
+    hi = packed >> 4
+    D2 = packed.shape[-1]
+    out = jnp.stack([lo, hi], axis=-1).reshape(packed.shape[:-1] + (2 * D2,))
+    return (out.astype(jnp.float32) * scale).astype(dtype)
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-row int8 (used by gradient compression)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xf / scale), -128, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)

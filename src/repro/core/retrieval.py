@@ -1,0 +1,115 @@
+"""Speculative fine-grained retrieval (paper §3.4).
+
+Three rounds, mirroring speculative decoding's draft→verify split:
+  1. *Speculative filtering*: the query is embedded at several granularities
+     (exit depths); each granularity filters its own top-k from the store —
+     this is what fixes the unbalanced-embedding-distribution problem (a
+     full-capacity query embedding alone under-retrieves shallow-exit items).
+  2. *Global verifying*: candidates are merged; duplicated IDs keep their
+     best score and the next-highest candidates fill the freed slots
+     (== unique-ified merged top-k).
+  3. *Fine-grained correcting*: surviving coarse candidates are refined by
+     the live encoder (remaining layers, resumed from the INT4 activation
+     cache) and matched against the fine-grained query embedding. Refined
+     items are permanently upgraded in the store.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.store import EmbeddingStore
+
+
+@dataclasses.dataclass
+class RetrievalResult:
+    uids: np.ndarray            # final ranking (k,)
+    scores: np.ndarray
+    filtered_uids: np.ndarray   # after round 2 (pre-refinement)
+    n_refined: int
+    latency_s: float
+    per_round_s: Dict[str, float]
+
+
+def speculative_filter(store: EmbeddingStore,
+                       query_embs: Sequence[np.ndarray], k: int
+                       ) -> List[Tuple[np.ndarray, np.ndarray]]:
+    """Round 1: per-granularity top-k. query_embs: list of (E,) vectors."""
+    return [store.search(q, k) for q in query_embs]
+
+
+def global_verify(rounds: List[Tuple[np.ndarray, np.ndarray]], k: int
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """Round 2: merge + dedup keeping the best score per uid, then top-k."""
+    best: Dict[int, float] = {}
+    for uids, scores in rounds:
+        for u, s in zip(uids.tolist(), scores.tolist()):
+            if u not in best or s > best[u]:
+                best[u] = s
+    if not best:
+        return np.zeros((0,), np.int64), np.zeros((0,), np.float32)
+    items = sorted(best.items(), key=lambda kv: -kv[1])[:k]
+    us, ss = zip(*items)
+    return np.asarray(us, np.int64), np.asarray(ss, np.float32)
+
+
+def speculative_retrieve(
+        store: EmbeddingStore,
+        query_embs: Sequence[np.ndarray],
+        fine_query: np.ndarray,
+        *, k: int = 10, final_k: int = 10,
+        refine_fn: Optional[Callable[[int], Optional[np.ndarray]]] = None,
+        refine_budget: Optional[int] = None,
+        upgrade: bool = True) -> RetrievalResult:
+    """Full pipeline. ``refine_fn(uid) -> fine_emb`` runs the live encoder
+    from the cached activations (None => item can't be refined, falls back to
+    its stored coarse embedding). ``refine_budget`` caps refinements (query
+    latency budget, Fig. 15)."""
+    t0 = time.perf_counter()
+    rounds = speculative_filter(store, query_embs, k)
+    t1 = time.perf_counter()
+    uids, _ = global_verify(rounds, k)
+    t2 = time.perf_counter()
+
+    dense = store.dense_matrix()
+    uid_to_idx = {e.uid: i for i, e in enumerate(store.entries)}
+    fine_embs = []
+    n_ref = 0
+    for u in uids.tolist():
+        entry = store.entries[uid_to_idx[u]]
+        emb = None
+        if (not entry.fine and refine_fn is not None
+                and (refine_budget is None or n_ref < refine_budget)):
+            emb = refine_fn(u)
+            if emb is not None:
+                n_ref += 1
+                if upgrade:
+                    store.upgrade(u, emb)
+        if emb is None:
+            emb = dense[uid_to_idx[u]]
+        fine_embs.append(np.asarray(emb, np.float32))
+    t3 = time.perf_counter()
+
+    if fine_embs:
+        F = np.stack(fine_embs)
+        scores = F @ np.asarray(fine_query, np.float32)
+        order = np.argsort(-scores)[:final_k]
+        uids_f, scores_f = uids[order], scores[order]
+    else:
+        uids_f = np.zeros((0,), np.int64)
+        scores_f = np.zeros((0,), np.float32)
+    t4 = time.perf_counter()
+    return RetrievalResult(
+        uids=uids_f, scores=scores_f, filtered_uids=uids, n_refined=n_ref,
+        latency_s=t4 - t0,
+        per_round_s={"filter": t1 - t0, "verify": t2 - t1,
+                     "refine": t3 - t2, "match": t4 - t3})
+
+
+def single_granularity_retrieve(store: EmbeddingStore, query_emb: np.ndarray,
+                                k: int = 10) -> Tuple[np.ndarray, np.ndarray]:
+    """Baseline: one full-capacity query embedding, no refinement."""
+    return store.search(query_emb, k)

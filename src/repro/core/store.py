@@ -1,0 +1,145 @@
+"""Embedding store: coarse embeddings + exit metadata + INT4 activation cache.
+
+Host-side (numpy) component of the serving runtime — the analogue of the
+paper's on-flash store. Embeddings are held INT4-packed (paper §5.4: ~5KB per
+1024-d item at INT4 + overhead); a dequantized fp32 matrix is cached for
+matmul search and invalidated on mutation. Queried items are permanently
+upgraded to fine-grained embeddings (§5.3 "web cookie" rule).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.quantize import dequantize_int4, quantize_int4
+
+
+@dataclasses.dataclass
+class StoreEntry:
+    uid: int
+    exit_idx: int          # index into the exit list (not layer number)
+    exit_layer: int        # layer depth of the coarse embedding
+    modality: str
+    fine: bool             # already refined to full depth?
+
+
+class EmbeddingStore:
+    def __init__(self, embed_dim: int, store_int4: bool = True):
+        self.embed_dim = embed_dim
+        self.store_int4 = store_int4
+        self.entries: List[StoreEntry] = []
+        self._packed: List[np.ndarray] = []   # (E//2,) int8 each (or fp32 row)
+        self._scales: List[np.ndarray] = []
+        self._act_cache: Dict[int, Tuple[np.ndarray, np.ndarray, Tuple[int, ...], int]] = {}
+        self._dense: Optional[np.ndarray] = None
+        self._lock = threading.Lock()
+
+    # -- mutation ------------------------------------------------------------
+
+    def add(self, uid: int, emb: np.ndarray, *, exit_idx: int, exit_layer: int,
+            modality: str = "", fine: bool = False,
+            cached_h: Optional[np.ndarray] = None) -> None:
+        emb = np.asarray(emb, np.float32)
+        with self._lock:
+            if self.store_int4:
+                p, s = quantize_int4(jnp.asarray(emb))
+                self._packed.append(np.asarray(p))
+                self._scales.append(np.asarray(s))
+            else:
+                self._packed.append(emb)
+                self._scales.append(np.ones((1,), np.float32))
+            self.entries.append(StoreEntry(uid, exit_idx, exit_layer, modality, fine))
+            if cached_h is not None:
+                ch = jnp.asarray(cached_h, jnp.float32)
+                shape = tuple(ch.shape)
+                flat = ch.reshape(-1, shape[-1])
+                p, s = quantize_int4(flat)
+                self._act_cache[uid] = (np.asarray(p), np.asarray(s), shape, exit_layer)
+            self._dense = None
+
+    def add_batch(self, uids, embs, exit_idxs, exit_layers, *, modality="",
+                  cached_hs=None) -> None:
+        for i, uid in enumerate(uids):
+            self.add(int(uid), np.asarray(embs[i]), exit_idx=int(exit_idxs[i]),
+                     exit_layer=int(exit_layers[i]), modality=modality,
+                     cached_h=None if cached_hs is None else np.asarray(cached_hs[i]))
+
+    def upgrade(self, uid: int, fine_emb: np.ndarray) -> None:
+        """Permanently replace a coarse embedding with its refined version."""
+        with self._lock:
+            i = self._index_of(uid)
+            emb = np.asarray(fine_emb, np.float32)
+            if self.store_int4:
+                p, s = quantize_int4(jnp.asarray(emb))
+                self._packed[i], self._scales[i] = np.asarray(p), np.asarray(s)
+            else:
+                self._packed[i] = emb
+            self.entries[i].fine = True
+            self._act_cache.pop(uid, None)  # §3.4: storage freed once refined
+            self._dense = None
+
+    # -- access --------------------------------------------------------------
+
+    def _index_of(self, uid: int) -> int:
+        for i, e in enumerate(self.entries):
+            if e.uid == uid:
+                return i
+        raise KeyError(uid)
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def dense_matrix(self) -> np.ndarray:
+        """(N, E) fp32 search matrix (lazy dequant cache)."""
+        with self._lock:
+            if self._dense is None:
+                if not self.entries:
+                    self._dense = np.zeros((0, self.embed_dim), np.float32)
+                elif self.store_int4:
+                    packed = np.stack(self._packed)
+                    scales = np.stack(self._scales)
+                    self._dense = np.asarray(
+                        dequantize_int4(jnp.asarray(packed), jnp.asarray(scales)))
+                else:
+                    self._dense = np.stack(self._packed)
+            return self._dense
+
+    def cached_activation(self, uid: int) -> Optional[Tuple[np.ndarray, int]]:
+        """Dequantized cached hidden state (h, exit_layer) or None."""
+        item = self._act_cache.get(uid)
+        if item is None:
+            return None
+        p, s, shape, exit_layer = item
+        h = np.asarray(dequantize_int4(jnp.asarray(p), jnp.asarray(s)))
+        return h.reshape(shape), exit_layer
+
+    def search(self, query: np.ndarray, k: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Top-k by inner product: returns (uids (k,), scores (k,))."""
+        M = self.dense_matrix()
+        if len(M) == 0:
+            return np.zeros((0,), np.int64), np.zeros((0,), np.float32)
+        scores = M @ np.asarray(query, np.float32)
+        k = min(k, len(M))
+        idx = np.argpartition(-scores, k - 1)[:k]
+        idx = idx[np.argsort(-scores[idx])]
+        uids = np.array([self.entries[i].uid for i in idx])
+        return uids, scores[idx]
+
+    # -- accounting ----------------------------------------------------------
+
+    def storage_bytes(self) -> Dict[str, int]:
+        emb = sum(p.nbytes + s.nbytes for p, s in zip(self._packed, self._scales))
+        act = sum(p.nbytes + s.nbytes for p, s, _, _ in self._act_cache.values())
+        return {"embeddings": emb, "act_cache": act, "total": emb + act,
+                "per_item": (emb // max(len(self.entries), 1))}
+
+    def exit_histogram(self, n_exits: int) -> np.ndarray:
+        h = np.zeros(n_exits, np.int64)
+        for e in self.entries:
+            h[e.exit_idx] += 1
+        return h

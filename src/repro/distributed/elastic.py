@@ -1,0 +1,67 @@
+"""Elastic scaling: restore any checkpoint onto any mesh.
+
+Checkpoints store logical (unsharded) arrays + a manifest; restoring applies
+the *current* mesh's shardings. ``validate_divisibility`` checks every leaf's
+sharded dims divide evenly under the new mesh — the one real constraint when
+growing/shrinking a job (e.g. 512 -> 256 chips after losing a pod).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.distributed import mesh_utils
+
+
+def validate_divisibility(tree, shardings) -> List[str]:
+    """Returns list of leaf-path problems (empty == ok)."""
+    problems = []
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    sflat = jax.tree.leaves(shardings, is_leaf=lambda s: isinstance(s, NamedSharding))
+    for (path, leaf), sh in zip(flat, sflat):
+        if not isinstance(sh, NamedSharding):
+            continue
+        spec = sh.spec
+        mesh = sh.mesh
+        for dim, names in enumerate(spec):
+            if names is None:
+                continue
+            names = (names,) if isinstance(names, str) else names
+            div = 1
+            for n in names:
+                div *= mesh.shape[n]
+            if leaf.shape[dim] % div != 0:
+                problems.append(
+                    f"{'/'.join(str(p) for p in path)}: dim {dim} size "
+                    f"{leaf.shape[dim]} not divisible by mesh factor {div}")
+    return problems
+
+
+def elastic_restore(ckpt: Checkpointer, like_tree, mesh: Mesh, rules,
+                    spec_tree, step: Optional[int] = None):
+    """Restore + reshard onto ``mesh``. spec_tree: logical-axes pytree."""
+    shardings = mesh_utils.make_shardings(spec_tree, mesh, rules)
+    tree, manifest = ckpt.restore(like_tree, step=step, shardings=shardings)
+    return tree, manifest
+
+
+def survivors_mesh(devices, shape: Tuple[int, ...], axis_names: Tuple[str, ...],
+                   failed: int = 0) -> Mesh:
+    """Build the largest mesh of the same axis names after ``failed`` device
+    losses, shrinking the *data* axis first (model/expert shards must stay
+    complete). Used by the recovery path in launch/train.py."""
+    import numpy as np
+    n = len(devices) - failed
+    shape = list(shape)
+    data_axes = [i for i, a in enumerate(axis_names) if a in ("data", "pod")]
+    for i in data_axes[::-1]:
+        while shape[i] > 1 and int(np.prod(shape)) > n:
+            shape[i] //= 2
+    total = int(np.prod(shape))
+    if total > n:
+        raise RuntimeError(f"cannot fit mesh {shape} on {n} devices")
+    devs = np.asarray(devices[:total]).reshape(shape)
+    return Mesh(devs, axis_names)

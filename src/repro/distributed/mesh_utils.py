@@ -1,0 +1,209 @@
+"""Logical-axis sharding rules (MaxText-style) and mesh context helpers.
+
+Parameters and activations are annotated with *logical* axis names
+(schema-driven, see repro.models.layers). A rules table maps logical names to
+mesh axes. Outside a mesh context every annotation is a no-op, so all models
+run unmodified on a single CPU device.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxis = Union[None, str, Tuple[str, ...]]
+Rules = Dict[str, MeshAxis]
+
+# ---------------------------------------------------------------------------
+# Rule tables
+# ---------------------------------------------------------------------------
+
+# Shared logical axes:
+#   params : embed, mlp, heads, kv_heads, head_dim, vocab, layer, expert,
+#            table_rows, hidden
+#   acts   : batch, seq, act_embed, kv_seq, nodes, edges, cands
+#
+# "fsdp" = shard weights over the data axis; XLA inserts the all-gathers
+# (ZeRO-3 style). "tp" = tensor parallel over the model axis.
+
+def lm_rules(multi_pod: bool, *, seq_shard_kv: bool = False,
+             fsdp: bool = True) -> Rules:
+    dp: MeshAxis = ("pod", "data") if multi_pod else "data"
+    rules: Rules = {
+        # params
+        "embed": "data" if fsdp else None,
+        "mlp": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "vocab": "model",
+        "layer": None,
+        "expert": "model",
+        # activations
+        "batch": dp,
+        "attn_batch": dp,   # attention-entry batch dim (override for archs
+                            # whose heads don't divide the model axis)
+        "seq": None,
+        "act_embed": None,
+        "kv_seq": "data" if seq_shard_kv else None,
+        "kv_batch": None if seq_shard_kv else dp,
+        "cands": None,
+    }
+    return rules
+
+
+def gnn_rules(multi_pod: bool) -> Rules:
+    dp: MeshAxis = ("pod", "data") if multi_pod else "data"
+    return {
+        "embed": None, "mlp": "model", "hidden": None, "layer": None,
+        "vocab": None, "heads": None, "kv_heads": None, "head_dim": None,
+        "batch": dp, "seq": None, "act_embed": None,
+        "nodes": dp, "edges": (dp, "model") if isinstance(dp, str) else ("pod", "data", "model"),
+        "cands": None,
+    }
+
+
+def recsys_rules(multi_pod: bool) -> Rules:
+    dp: MeshAxis = ("pod", "data") if multi_pod else "data"
+    return {
+        "embed": None, "mlp": "model", "hidden": None, "layer": None,
+        "heads": None, "kv_heads": None, "head_dim": None,
+        "table_rows": ("data", "model"),
+        "vocab": ("data", "model"),
+        "batch": dp, "seq": None, "act_embed": None,
+        "cands": ("data", "model"),
+    }
+
+
+def mem_rules(multi_pod: bool) -> Rules:
+    r = lm_rules(multi_pod)
+    r["vocab"] = "model"
+    return r
+
+
+def rules_for_family(family: str, multi_pod: bool, **kw) -> Rules:
+    if family == "lm":
+        return lm_rules(multi_pod, **kw)
+    if family == "gnn":
+        return gnn_rules(multi_pod)
+    if family == "recsys":
+        return recsys_rules(multi_pod)
+    if family == "mem":
+        return mem_rules(multi_pod)
+    raise ValueError(family)
+
+
+# ---------------------------------------------------------------------------
+# Context
+# ---------------------------------------------------------------------------
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Optional[Rules] = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh: Optional[Mesh], rules: Optional[Rules]):
+    """Activate logical-axis constraint propagation inside the block."""
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = mesh, rules
+    try:
+        if mesh is not None:
+            with mesh:
+                yield
+        else:
+            yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def logical_to_spec(axes: Sequence[Optional[str]], rules: Rules) -> P:
+    """Map logical axis names to a PartitionSpec, dropping duplicate mesh axes."""
+    used = set()
+    parts = []
+    for name in axes:
+        mesh_ax = rules.get(name) if name is not None else None
+        if mesh_ax is None:
+            parts.append(None)
+            continue
+        flat = (mesh_ax,) if isinstance(mesh_ax, str) else tuple(mesh_ax)
+        keep = tuple(a for a in flat if a not in used)
+        used.update(keep)
+        if not keep:
+            parts.append(None)
+        elif len(keep) == 1:
+            parts.append(keep[0])
+        else:
+            parts.append(keep)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def _drop_indivisible(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Remove mesh axes whose size does not divide the array dim (e.g. 2 KV
+    heads on a 16-way model axis -> replicate KV heads instead of failing)."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, names in zip(shape, parts):
+        if names is None:
+            out.append(None)
+            continue
+        flat = (names,) if isinstance(names, str) else tuple(names)
+        keep = []
+        size = dim
+        for n in flat:
+            if size % mesh.shape[n] == 0:
+                keep.append(n)
+                size //= mesh.shape[n]
+        out.append(None if not keep else (keep[0] if len(keep) == 1 else tuple(keep)))
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def shard_activation(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+    """Constrain intermediate activation sharding; no-op outside a mesh ctx."""
+    if _CTX.mesh is None or _CTX.rules is None:
+        return x
+    if x.ndim != len(axes):
+        return x
+    spec = logical_to_spec(axes, _CTX.rules)
+    spec = _drop_indivisible(spec, x.shape, _CTX.mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_CTX.mesh, spec))
+
+
+def make_shardings(spec_tree, mesh: Mesh, rules: Rules, abstract_tree=None):
+    """Logical-axes pytree -> NamedSharding pytree. If ``abstract_tree``
+    (matching ShapeDtypeStructs) is given, axes that don't divide the dim are
+    dropped per-leaf."""
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x)
+    if abstract_tree is None:
+        return jax.tree.map(
+            lambda axes: NamedSharding(mesh, logical_to_spec(axes, rules)),
+            spec_tree, is_leaf=is_axes)
+
+    def to_sharding(axes, ab):
+        spec = _drop_indivisible(logical_to_spec(axes, rules), ab.shape, mesh)
+        return NamedSharding(mesh, spec)
+    return jax.tree.map(to_sharding, spec_tree, abstract_tree, is_leaf=is_axes)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def mesh_device_count(mesh: Mesh) -> int:
+    n = 1
+    for v in mesh.shape.values():
+        n *= v
+    return n

@@ -1,0 +1,34 @@
+"""Decode attention op (flash-decoding shape): one query token vs long KV.
+
+The XLA path materializes only (B, H, S) scores — linear in S — which is the
+exact roofline-optimal data movement for decode (the KV cache read dominates).
+The Pallas kernel (kernel.py) blocks over S with running max/sum so the score
+row never leaves VMEM.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.decode_attention.ref import decode_attention_reference
+
+NEG_INF = -1e30
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     lengths: jax.Array, *, window: int = 0,
+                     scale: Optional[float] = None,
+                     block_kv: int = 512,
+                     impl: str = "xla") -> jax.Array:
+    """q (B,H,D); k,v (B,S,KV,D); lengths (B,) -> (B,H,D)."""
+    if impl == "ref" or impl == "xla":
+        # The direct path IS memory-optimal for decode; keep one code path.
+        return decode_attention_reference(q, k, v, lengths, window=window, scale=scale)
+    if impl == "pallas":
+        from repro.kernels.decode_attention.kernel import decode_fwd_pallas
+        return decode_fwd_pallas(q, k, v, lengths, window=window,
+                                 scale=scale, block_kv=block_kv)
+    raise ValueError(impl)

@@ -1,0 +1,32 @@
+"""Oracle for single-token decode attention with a (possibly partial) KV cache."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def decode_attention_reference(q: jax.Array, k: jax.Array, v: jax.Array,
+                               lengths: jax.Array, *, window: int = 0,
+                               scale: Optional[float] = None) -> jax.Array:
+    """q: (B, H, D) one query per sequence; k, v: (B, S, KV, D);
+    lengths: (B,) int32 — positions < length are valid (the query sits at
+    position length-1). Returns (B, H, D)."""
+    B, H, D = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    qg = q.reshape(B, KV, G, D).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bjkd->bkgj", qg, k.astype(jnp.float32)) * scale
+    pos = jnp.arange(S)[None, :]  # (1, S)
+    valid = pos < lengths[:, None]
+    if window and window > 0:
+        valid &= pos > (lengths[:, None] - 1 - window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgj,bjkd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, D).astype(q.dtype)

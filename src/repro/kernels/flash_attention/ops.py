@@ -1,0 +1,230 @@
+"""Flash attention op: blocked, memory-O(block^2), differentiable.
+
+Dispatch:
+  * ``impl="xla"``    — blocked pure-JAX path (lax.scan over q/kv blocks) with a
+    hand-written custom_vjp (FlashAttention-style recomputing backward). This
+    is the lowering path used by the dry-run on CPU and the backward used on
+    all backends.
+  * ``impl="pallas"`` — Pallas TPU forward kernel (kernel.py); backward reuses
+    the blocked-JAX backward.
+  * ``impl="ref"``    — direct materialized oracle (tests, tiny shapes).
+
+Layouts: q (B, Sq, H, D); k, v (B, Skv, KV, D); GQA via H = KV * G. All block
+compute accumulates in float32 (mirrors MXU accumulation).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.kernels.flash_attention.ref import attention_reference
+
+NEG_INF = -1e30
+
+
+class _Cfg(NamedTuple):
+    causal: bool
+    window: int
+    q_offset: int
+    scale: float
+    block_q: int
+    block_kv: int
+    skv_real: int  # unpadded kv length
+    sq_real: int
+    use_pallas: bool
+    block_skip: bool  # skip fully-masked kv blocks (causal/window)
+    unroll: bool      # unroll block scans (roofline probes need loop-free HLO)
+
+
+def _block_mask(cfg: _Cfg, qi0, kj0):
+    """(bq, bkv) bool mask for q block starting at qi0, kv block at kj0."""
+    qpos = qi0 + jnp.arange(cfg.block_q)[:, None] + cfg.q_offset
+    kpos = kj0 + jnp.arange(cfg.block_kv)[None, :]
+    m = kpos < cfg.skv_real
+    m &= (qpos - cfg.q_offset) < cfg.sq_real
+    if cfg.causal:
+        m = m & (kpos <= qpos)
+    if cfg.window > 0:
+        m = m & (kpos > qpos - cfg.window)
+    return m
+
+
+def _kv_block_live(cfg: _Cfg, qi0: int, kj0) -> jax.Array:
+    """Scalar bool: does kv block j intersect the mask for q block i at all?"""
+    q_lo = qi0 + cfg.q_offset
+    q_hi = qi0 + cfg.block_q - 1 + cfg.q_offset
+    live = kj0 < cfg.skv_real
+    if cfg.causal:
+        live &= kj0 <= q_hi
+    if cfg.window > 0:
+        live &= (kj0 + cfg.block_kv - 1) > (q_lo - cfg.window)
+    return live
+
+
+def _fwd_blocked(cfg: _Cfg, q, k, v):
+    """q: (B,KV,G,Sq,D); k,v: (B,KV,Skv,D). Returns (out, lse)."""
+    B, KV, G, Sq, D = q.shape
+    Skv = k.shape[2]
+    nq, nkv = Sq // cfg.block_q, Skv // cfg.block_kv
+    bq, bkv = cfg.block_q, cfg.block_kv
+
+    def q_step(_, i):
+        qi = lax.dynamic_slice_in_dim(q, i * bq, bq, axis=3)
+
+        def kv_body(carry, j):
+            o, m, l = carry
+            kj = lax.dynamic_slice_in_dim(k, j * bkv, bkv, axis=2)
+            vj = lax.dynamic_slice_in_dim(v, j * bkv, bkv, axis=2)
+            s = jnp.einsum("bkgqd,bkjd->bkgqj", qi, kj,
+                           preferred_element_type=jnp.float32) * cfg.scale
+            s = jnp.where(_block_mask(cfg, i * bq, j * bkv)[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(-1)
+            pv = jnp.einsum("bkgqj,bkjd->bkgqd", p.astype(v.dtype), vj,
+                            preferred_element_type=jnp.float32)
+            o_new = o * alpha[..., None] + pv
+            return (o_new, m_new, l_new), None
+
+        def kv_step(carry, j):
+            if not cfg.block_skip:
+                return kv_body(carry, j)
+            return lax.cond(_kv_block_live(cfg, i * bq, j * bkv),
+                            lambda c: kv_body(c, j)[0], lambda c: c, carry), None
+
+        init = (jnp.zeros((B, KV, G, bq, D), jnp.float32),
+                jnp.full((B, KV, G, bq), NEG_INF, jnp.float32),
+                jnp.zeros((B, KV, G, bq), jnp.float32))
+        (o, m, l), _ = lax.scan(kv_step, init, jnp.arange(nkv), unroll=cfg.unroll)
+        l_safe = jnp.maximum(l, 1e-30)
+        o = (o / l_safe[..., None]).astype(q.dtype)
+        lse = m + jnp.log(l_safe)
+        return None, (o, lse)
+
+    _, (o_blocks, lse_blocks) = lax.scan(q_step, None, jnp.arange(nq),
+                                         unroll=cfg.unroll)
+    # (nq, B, KV, G, bq, ...) -> (B, KV, G, Sq, ...)
+    out = jnp.moveaxis(o_blocks, 0, 3).reshape(B, KV, G, Sq, D)
+    lse = jnp.moveaxis(lse_blocks, 0, 3).reshape(B, KV, G, Sq)
+    return out, lse
+
+
+def _bwd_blocked(cfg: _Cfg, q, k, v, out, lse, do):
+    B, KV, G, Sq, D = q.shape
+    Skv = k.shape[2]
+    nq, nkv = Sq // cfg.block_q, Skv // cfg.block_kv
+    bq, bkv = cfg.block_q, cfg.block_kv
+    delta = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)  # (B,KV,G,Sq)
+
+    def kv_step(dq_acc, j):
+        kj = lax.dynamic_slice_in_dim(k, j * bkv, bkv, axis=2)
+        vj = lax.dynamic_slice_in_dim(v, j * bkv, bkv, axis=2)
+
+        def q_body(carry, i):
+            dq_acc, dk_j, dv_j = carry
+            qi = lax.dynamic_slice_in_dim(q, i * bq, bq, axis=3)
+            doi = lax.dynamic_slice_in_dim(do, i * bq, bq, axis=3).astype(jnp.float32)
+            li = lax.dynamic_slice_in_dim(lse, i * bq, bq, axis=3)
+            di = lax.dynamic_slice_in_dim(delta, i * bq, bq, axis=3)
+            s = jnp.einsum("bkgqd,bkjd->bkgqj", qi, kj,
+                           preferred_element_type=jnp.float32) * cfg.scale
+            mask = _block_mask(cfg, i * bq, j * bkv)[None, None, None]
+            p = jnp.where(mask, jnp.exp(s - li[..., None]), 0.0)
+            dp = jnp.einsum("bkgqd,bkjd->bkgqj", doi.astype(v.dtype), vj,
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - di[..., None]) * cfg.scale
+            dq_i = jnp.einsum("bkgqj,bkjd->bkgqd", ds.astype(k.dtype), kj,
+                              preferred_element_type=jnp.float32)
+            dk_j = dk_j + jnp.einsum("bkgqj,bkgqd->bkjd", ds.astype(q.dtype), qi,
+                                     preferred_element_type=jnp.float32)
+            dv_j = dv_j + jnp.einsum("bkgqj,bkgqd->bkjd", p.astype(do.dtype),
+                                     doi.astype(do.dtype),
+                                     preferred_element_type=jnp.float32)
+            dq_acc = lax.dynamic_update_slice_in_dim(
+                dq_acc, lax.dynamic_slice_in_dim(dq_acc, i * bq, bq, axis=3) + dq_i,
+                i * bq, axis=3)
+            return (dq_acc, dk_j, dv_j), None
+
+        init = (dq_acc,
+                jnp.zeros((B, KV, bkv, D), jnp.float32),
+                jnp.zeros((B, KV, bkv, D), jnp.float32))
+        (dq_acc, dk_j, dv_j), _ = lax.scan(q_body, init, jnp.arange(nq),
+                                           unroll=cfg.unroll)
+        return dq_acc, (dk_j, dv_j)
+
+    dq0 = jnp.zeros((B, KV, G, Sq, D), jnp.float32)
+    dq, (dk_b, dv_b) = lax.scan(kv_step, dq0, jnp.arange(nkv), unroll=cfg.unroll)
+    dk = jnp.moveaxis(dk_b, 0, 2).reshape(B, KV, Skv, D)
+    dv = jnp.moveaxis(dv_b, 0, 2).reshape(B, KV, Skv, D)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _flash(cfg: _Cfg, q, k, v):
+    out, _ = _flash_fwd(cfg, q, k, v)
+    return out
+
+
+def _flash_fwd(cfg: _Cfg, q, k, v):
+    if cfg.use_pallas:
+        from repro.kernels.flash_attention.kernel import flash_fwd_pallas
+        out, lse = flash_fwd_pallas(cfg, q, k, v)
+    else:
+        out, lse = _fwd_blocked(cfg, q, k, v)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(cfg: _Cfg, res, do):
+    q, k, v, out, lse = res
+    return _bwd_blocked(cfg, q, k, v, out, lse, do)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def _pad_to(x, mult, axis):
+    s = x.shape[axis]
+    pad = (-s) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0, q_offset: int = 0,
+                    scale: Optional[float] = None,
+                    block_q: int = 256, block_kv: int = 256,
+                    block_skip: bool = False, unroll: bool = False,
+                    impl: str = "xla") -> jax.Array:
+    """Blocked attention. q (B,Sq,H,D), k/v (B,Skv,KV,D) -> (B,Sq,H,D)."""
+    B, Sq, H, D = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    assert H % KV == 0, (H, KV)
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    if impl == "ref":
+        return attention_reference(q, k, v, causal=causal, window=window,
+                                   q_offset=q_offset, scale=scale)
+    bq, bkv = min(block_q, Sq), min(block_kv, Skv)
+    cfg = _Cfg(causal=causal, window=window, q_offset=q_offset, scale=float(scale),
+               block_q=bq, block_kv=bkv, skv_real=Skv, sq_real=Sq,
+               use_pallas=(impl == "pallas"), block_skip=block_skip,
+               unroll=unroll)
+    # grouped layout
+    qg = jnp.moveaxis(q, 2, 1).reshape(B, KV, G, Sq, D)
+    kg = jnp.moveaxis(k, 2, 1)  # (B, KV, Skv, D)
+    vg = jnp.moveaxis(v, 2, 1)
+    qg = _pad_to(qg, bq, axis=3)
+    kg = _pad_to(kg, bkv, axis=2)
+    vg = _pad_to(vg, bkv, axis=2)
+    out = _flash(cfg, qg, kg, vg)
+    out = out[:, :, :, :Sq]
+    return jnp.moveaxis(out.reshape(B, H, Sq, D), 1, 2)

@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for flash attention: direct (materialized) softmax attention.
+
+Small shapes only — this is the correctness reference for both the blocked
+XLA path (ops.py) and the Pallas TPU kernel (kernel.py).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def attention_reference(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        q_offset: int = 0,
+                        scale: Optional[float] = None) -> jax.Array:
+    """q: (B, Sq, H, D); k, v: (B, Skv, KV, D), H % KV == 0. Returns (B, Sq, H, D).
+
+    ``q_offset`` shifts query positions (query i sits at absolute position
+    i + q_offset) — used for decode and chunked prefill.
+    """
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    qg = q.reshape(B, Sq, KV, G, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bjkd->bkgqj", qg, kf) * scale  # (B,KV,G,Sq,Skv)
+
+    qi = jnp.arange(Sq)[:, None] + q_offset
+    kj = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= kj <= qi
+    if window and window > 0:
+        mask &= kj > (qi - window)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqj,bjkd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, D).astype(q.dtype)

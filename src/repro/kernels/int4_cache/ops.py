@@ -1,0 +1,22 @@
+"""Dispatch wrapper for INT4 cache quant/dequant."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import dequantize_int4, quantize_int4
+from repro.kernels.int4_cache.kernel import (dequantize_int4_pallas,
+                                             quantize_int4_pallas)
+
+
+def quantize(x: jax.Array, impl: str = "xla", **kw):
+    if impl == "pallas":
+        return quantize_int4_pallas(x, **kw)
+    return quantize_int4(x)
+
+
+def dequantize(packed: jax.Array, scale: jax.Array, impl: str = "xla",
+               dtype=jnp.float32, **kw):
+    if impl == "pallas":
+        return dequantize_int4_pallas(packed, scale, dtype=dtype, **kw)
+    return dequantize_int4(packed, scale, dtype=dtype)

@@ -1,0 +1,5 @@
+"""Oracle for the INT4 activation-cache kernels (= repro.core.quantize)."""
+from repro.core.quantize import dequantize_int4 as dequantize_int4_reference
+from repro.core.quantize import quantize_int4 as quantize_int4_reference
+
+__all__ = ["quantize_int4_reference", "dequantize_int4_reference"]

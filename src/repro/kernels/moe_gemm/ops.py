@@ -1,0 +1,66 @@
+"""Grouped expert GEMM op: sort-by-expert -> padded grouped GEMM -> unsort.
+
+``moe_gemm(x, expert_ids, w)`` computes y[t] = x[t] @ w[expert_ids[t]] with
+static shapes throughout. The sort/pad plan is computed in jnp (runs on
+device); the GEMM itself dispatches to the Pallas kernel or an XLA fallback
+that uses the same sorted layout (one dynamic-slice-free einsum per expert
+would be ragged — the fallback instead uses the oracle gather form, which XLA
+fuses acceptably at small scale).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.moe_gemm.kernel import moe_gemm_pallas
+from repro.kernels.moe_gemm.ref import moe_gemm_reference
+
+
+def sort_by_expert(expert_ids: jax.Array, n_experts: int, block_t: int
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array, int]:
+    """Plan: returns (order (T,), slot (T,) position of each token in the
+    padded-sorted buffer, block_expert (nT,), padded_len).
+
+    Each expert group is padded up to a multiple of block_t so no token block
+    straddles two experts. padded_len = T_pad is static:
+    n_experts*block_t + T rounded up."""
+    T = expert_ids.shape[0]
+    counts = jnp.bincount(expert_ids, length=n_experts)  # (E,)
+    padded_counts = ((counts + block_t - 1) // block_t) * block_t
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                              jnp.cumsum(padded_counts)[:-1]])
+    T_pad = int(((T + block_t - 1) // block_t + n_experts)) * block_t  # static bound
+    order = jnp.argsort(expert_ids, stable=True)  # tokens grouped by expert
+    sorted_e = expert_ids[order]
+    # position of each sorted token within its expert group
+    pos_in_group = jnp.arange(T) - jnp.take(
+        jnp.concatenate([jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]]),
+        sorted_e)
+    slot = jnp.take(starts, sorted_e) + pos_in_group  # (T,)
+    # expert of every block (blocks belonging to padding map to expert 0 but
+    # their outputs are dropped on unsort)
+    n_blocks = T_pad // block_t
+    block_starts = jnp.arange(n_blocks) * block_t
+    block_expert = jnp.clip(
+        jnp.searchsorted(jnp.cumsum(padded_counts), block_starts, side="right"),
+        0, n_experts - 1).astype(jnp.int32)
+    return order, slot.astype(jnp.int32), block_expert, T_pad
+
+
+def moe_gemm(x: jax.Array, expert_ids: jax.Array, w: jax.Array, *,
+             block_t: int = 256, block_f: int = 512,
+             impl: str = "xla", interpret: bool = True) -> jax.Array:
+    """x (T,d); expert_ids (T,); w (E,d,f) -> (T,f)."""
+    if impl != "pallas":
+        return moe_gemm_reference(x, expert_ids, w)
+    T, d = x.shape
+    E = w.shape[0]
+    order, slot, block_expert, T_pad = sort_by_expert(expert_ids, E, block_t)
+    xs = jnp.zeros((T_pad, d), x.dtype).at[slot].set(x[order])
+    ys = moe_gemm_pallas(xs, block_expert, w, block_t=block_t,
+                         block_f=block_f, interpret=interpret)
+    y_sorted = ys[slot]  # (T, f) back in sorted order
+    inv = jnp.zeros_like(order).at[order].set(jnp.arange(T))
+    return y_sorted[inv]

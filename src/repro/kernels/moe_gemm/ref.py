@@ -1,0 +1,14 @@
+"""Oracle for grouped expert GEMM (dense masked einsum)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def moe_gemm_reference(x: jax.Array, expert_ids: jax.Array,
+                       w: jax.Array) -> jax.Array:
+    """x (T, d); expert_ids (T,) int32 in [0, E); w (E, d, f) -> (T, f).
+    Each token multiplies its own expert's weight matrix."""
+    per_tok_w = jnp.take(w, expert_ids, axis=0)  # (T, d, f) — oracle only
+    return jnp.einsum("td,tdf->tf", x.astype(jnp.float32),
+                      per_tok_w.astype(jnp.float32)).astype(x.dtype)

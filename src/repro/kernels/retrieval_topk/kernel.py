@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: fused L2-normalize x bank-matmul x streaming top-k.
+
+The query hot path of speculative filtering (§3.4): each query granularity
+scans the whole store once. Blocking over the bank keeps the (bq, bn) score
+tile in VMEM; a running (bq, k) best-scores/ids pair is merged per step
+(sort-based merge — lowers to the TPU sort unit), so the full (Q, N) score
+matrix never exists. HBM traffic = one pass over the bank = roofline optimum
+for a single query batch.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    pltpu = None
+    _VMEM = None
+
+NEG_INF = -1e30
+
+
+def _topk_kernel(q_ref, b_ref, s_out, i_out, best_s, best_i, *, k: int,
+                 block_n: int, nn: int, n_real: int, normalize: bool):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        best_s[...] = jnp.full_like(best_s, NEG_INF)
+        best_i[...] = jnp.zeros_like(best_i)
+
+    q = q_ref[...].astype(jnp.float32)  # (bq, E)
+    b = b_ref[...].astype(jnp.float32)  # (bn, E)
+    if normalize:
+        q = q * jax.lax.rsqrt(jnp.maximum(jnp.sum(q * q, -1, keepdims=True), 1e-16))
+        b = b * jax.lax.rsqrt(jnp.maximum(jnp.sum(b * b, -1, keepdims=True), 1e-16))
+    s = jax.lax.dot_general(q, b, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (bq, bn)
+    ids = j * block_n + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(ids < n_real, s, NEG_INF)
+
+    cat_s = jnp.concatenate([best_s[...], s], axis=1)           # (bq, k+bn)
+    cat_i = jnp.concatenate([best_i[...], ids], axis=1)
+    new_s, sel = jax.lax.top_k(cat_s, k)
+    new_i = jnp.take_along_axis(cat_i, sel, axis=1)
+    best_s[...] = new_s
+    best_i[...] = new_i
+
+    @pl.when(j == nn - 1)
+    def _final():
+        s_out[...] = best_s[...]
+        i_out[...] = best_i[...]
+
+
+def retrieval_topk_pallas(query: jax.Array, bank: jax.Array, k: int, *,
+                          normalize: bool = True, block_q: int = 128,
+                          block_n: int = 1024, interpret: bool = True
+                          ) -> Tuple[jax.Array, jax.Array]:
+    Q, E = query.shape
+    N = bank.shape[0]
+    bq = min(block_q, Q)
+    bn = min(block_n, N)
+    padq = (-Q) % bq
+    padn = (-N) % bn
+    if padq:
+        query = jnp.pad(query, ((0, padq), (0, 0)))
+    if padn:
+        bank = jnp.pad(bank, ((0, padn), (0, 0)))
+    nq = query.shape[0] // bq
+    nn = bank.shape[0] // bn
+    kernel = functools.partial(_topk_kernel, k=k, block_n=bn, nn=nn,
+                               n_real=N, normalize=normalize)
+    scores, ids = pl.pallas_call(
+        kernel,
+        grid=(nq, nn),
+        in_specs=[pl.BlockSpec((bq, E), lambda i, j: (i, 0)),
+                  pl.BlockSpec((bn, E), lambda i, j: (j, 0))],
+        out_specs=[pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+                   pl.BlockSpec((bq, k), lambda i, j: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((query.shape[0], k), jnp.float32),
+                   jax.ShapeDtypeStruct((query.shape[0], k), jnp.int32)],
+        scratch_shapes=[_VMEM((bq, k), jnp.float32),
+                        _VMEM((bq, k), jnp.int32)],
+        interpret=interpret,
+    )(query, bank)
+    return scores[:Q], ids[:Q]

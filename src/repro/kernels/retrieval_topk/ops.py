@@ -1,0 +1,17 @@
+"""Dispatch wrapper for fused retrieval top-k."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+from repro.kernels.retrieval_topk.kernel import retrieval_topk_pallas
+from repro.kernels.retrieval_topk.ref import retrieval_topk_reference
+
+
+def retrieval_topk(query: jax.Array, bank: jax.Array, k: int, *,
+                   normalize: bool = True, impl: str = "xla",
+                   **kw) -> Tuple[jax.Array, jax.Array]:
+    if impl == "pallas":
+        return retrieval_topk_pallas(query, bank, k, normalize=normalize, **kw)
+    return retrieval_topk_reference(query, bank, k, normalize=normalize)

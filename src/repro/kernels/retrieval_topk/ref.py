@@ -1,0 +1,21 @@
+"""Oracle for fused retrieval top-k: normalize -> matmul -> top_k."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def retrieval_topk_reference(query: jax.Array, bank: jax.Array, k: int, *,
+                             normalize: bool = True
+                             ) -> Tuple[jax.Array, jax.Array]:
+    """query (Q,E); bank (N,E) -> (scores (Q,k), ids (Q,k))."""
+    q = query.astype(jnp.float32)
+    b = bank.astype(jnp.float32)
+    if normalize:
+        q = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-8)
+        b = b / jnp.maximum(jnp.linalg.norm(b, axis=-1, keepdims=True), 1e-8)
+    sims = q @ b.T
+    scores, ids = jax.lax.top_k(sims, k)
+    return scores, ids.astype(jnp.int32)

@@ -1,0 +1,14 @@
+"""Dispatch wrapper for fused RMSNorm."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.rmsnorm.kernel import rmsnorm_pallas
+from repro.models.layers import rmsnorm
+
+
+def rmsnorm_op(x: jax.Array, scale: jax.Array, eps: float = 1e-6,
+               impl: str = "xla", **kw) -> jax.Array:
+    if impl == "pallas":
+        return rmsnorm_pallas(x, scale, eps, **kw)
+    return rmsnorm(x, scale, eps)

@@ -1,0 +1,4 @@
+"""Oracle for the fused RMSNorm kernel."""
+from repro.models.layers import rmsnorm as rmsnorm_reference
+
+__all__ = ["rmsnorm_reference"]

@@ -1,0 +1,232 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh and extract memory / cost / collective / roofline numbers.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+  PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-67b --shape long_500k --window 8192
+
+The first two lines of this file MUST stay ahead of any jax import: jax locks
+the device count at first init, and only the dry-run wants 512 host devices.
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+
+from repro.configs.base import get_arch, list_archs
+from repro.distributed.mesh_utils import sharding_ctx
+from repro.launch import hlo_analysis as H
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import analytic_hbm_bytes_for, build_step
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "benchmarks", "artifacts", "dryrun")
+
+
+def _compile_cell(spec, shape, mesh, multi_pod, *, window=0, n_layers=None,
+                  probe: bool = False, rules_overrides=None):
+    bundle = build_step(spec, shape, mesh, multi_pod=multi_pod, window=window,
+                        n_layers=n_layers, probe=probe,
+                        rules_overrides=rules_overrides)
+    jitted = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
+                     out_shardings=bundle.out_shardings,
+                     donate_argnums=bundle.donate_argnums)
+    with sharding_ctx(mesh, bundle.rules):
+        lowered = jitted.lower(*bundle.abstract_args)
+        compiled = lowered.compile()
+    return bundle, lowered, compiled
+
+
+def analyze_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+                 window: int = 0, probe_layers=(1, 2),
+                 rules_overrides=None, verbose: bool = True) -> Dict[str, Any]:
+    spec = get_arch(arch)
+    shape = spec.shape(shape_name)
+    n_dev = 512 if multi_pod else 256
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    result: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": n_dev, "window": window, "status": "ok",
+    }
+    if shape.skip_reason and window == 0:
+        result["status"] = "skipped"
+        result["skip_reason"] = shape.skip_reason
+        return result
+
+    t0 = time.time()
+    bundle, lowered, compiled = _compile_cell(
+        spec, shape, mesh, multi_pod, window=window,
+        rules_overrides=rules_overrides)
+    t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    colls = H.parse_collectives(hlo, n_dev)
+
+    result.update({
+        "step": bundle.name,
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_per_device": (ma.argument_size_in_bytes
+                                + ma.output_size_in_bytes
+                                + ma.temp_size_in_bytes
+                                - ma.alias_size_in_bytes),
+        },
+        "cost_analysis_raw": {"flops": ca.get("flops", 0.0),
+                              "bytes_accessed": ca.get("bytes accessed", 0.0)},
+        "collectives": colls.as_dict(),
+        "model_flops_total": bundle.model_flops,
+    })
+
+    # ---- full-depth FLOP/byte/collective extrapolation from unrolled probes
+    fam = spec.family
+    depth_attr = {"lm": lambda s: s.model.n_layers,
+                  "mem": lambda s: max(t.n_layers for t in s.model.towers),
+                  "gnn": lambda s: s.model.n_layers}.get(fam)
+    if depth_attr is not None and probe_layers:
+        L_full = depth_attr(spec)
+        probes = {}
+        for L_i in probe_layers:
+            _, lo_i, co_i = _compile_cell(
+                spec, shape, mesh, multi_pod, window=window, n_layers=L_i,
+                probe=True, rules_overrides=rules_overrides)
+            ca_i = co_i.cost_analysis() or {}
+            colls_i = H.parse_collectives(co_i.as_text(), n_dev)
+            probes[L_i] = {"flops": ca_i.get("flops", 0.0),
+                           "bytes": ca_i.get("bytes accessed", 0.0),
+                           "wire": colls_i.total_wire_bytes}
+        (l1, p1), (l2, p2) = sorted(probes.items())
+        flops_dev = H.linear_fit_two(l1, p1["flops"], l2, p2["flops"], L_full)
+        bytes_dev = H.linear_fit_two(l1, p1["bytes"], l2, p2["bytes"], L_full)
+        wire_dev = H.linear_fit_two(l1, p1["wire"], l2, p2["wire"], L_full)
+        # probes run at microbatches=1; per-mb fixed collectives (grad
+        # reductions, weight gathers) repeat per real microbatch -> scale up
+        # (upper bound for the token-proportional share; documented).
+        wire_dev *= max(1, int(bundle.meta.get("microbatches", 1)))
+        # flash-attention inner block loops are still loops inside the probe:
+        # add the exact per-layer correction for the bodies counted once.
+        corr_f = corr_b = 0.0
+        m = bundle.meta
+        if fam in ("lm", "mem") and "block_q" in m and bundle.name != "serve_step":
+            cfg_m = m["cfg"]
+            if fam == "lm":
+                S = shape.seq_len
+                cf, cb = H.flash_loop_correction(
+                    B=shape.global_batch, KV=cfg_m.n_kv_heads,
+                    G=cfg_m.n_heads // cfg_m.n_kv_heads, D=cfg_m.head_dim,
+                    Sq=S, Skv=S, bq=m["block_q"], bkv=m["block_kv"],
+                    train=m.get("train", False), remat=m.get("remat", False),
+                    causal_skip=m.get("block_skip", False))
+                corr_f, corr_b = cf * L_full / n_dev, cb * L_full / n_dev
+            else:  # mem: sum per-tower corrections
+                for t in cfg_m.towers:
+                    cf, cb = H.flash_loop_correction(
+                        B=shape.global_batch, KV=t.n_heads, G=1,
+                        D=t.d_model // t.n_heads, Sq=t.n_tokens + 1,
+                        Skv=t.n_tokens + 1, bq=256, bkv=256,
+                        train=(bundle.name == "train_step"),
+                        remat=(bundle.name == "train_step"))
+                    corr_f += cf * t.n_layers / n_dev
+                    corr_b += cb * t.n_layers / n_dev
+        flops_dev += corr_f
+        bytes_dev += corr_b
+        result["probes"] = probes
+        result["extrapolated"] = {"flops_per_device": flops_dev,
+                                  "hbm_bytes_per_device": bytes_dev,
+                                  "wire_bytes_per_device": wire_dev,
+                                  "layers": L_full,
+                                  "attn_loop_corr_flops": corr_f,
+                                  "attn_loop_corr_bytes": corr_b}
+    else:
+        flops_dev = ca.get("flops", 0.0)
+        bytes_dev = ca.get("bytes accessed", 0.0)
+        wire_dev = colls.total_wire_bytes
+
+    analytic_bytes = analytic_hbm_bytes_for(spec, shape, bundle, mesh, n_dev)
+    roof = H.Roofline(flops_per_device=max(flops_dev, 0.0),
+                      hbm_bytes_per_device=max(analytic_bytes, 0.0),
+                      wire_bytes_per_device=max(wire_dev, 0.0),
+                      n_devices=n_dev, model_flops_total=bundle.model_flops,
+                      hbm_bytes_upper=max(bytes_dev, 0.0))
+    result["roofline"] = roof.as_dict()
+
+    if verbose:
+        mem = result["memory"]["peak_per_device"] / 2**30
+        r = result["roofline"]
+        print(f"[{arch} x {shape_name} @ {result['mesh']}] {bundle.name}: "
+              f"compile {t_compile:.0f}s, peak {mem:.2f} GiB/dev, "
+              f"compute {r['compute_s']*1e3:.2f}ms mem {r['memory_s']*1e3:.2f}ms "
+              f"coll {r['collective_s']*1e3:.2f}ms -> {r['bottleneck']} "
+              f"(MFU@roof {r['mfu_at_roofline']*100:.1f}%)")
+    return result
+
+
+def save_artifact(result: Dict[str, Any], out_dir: Optional[str] = None):
+    out_dir = out_dir or ARTIFACT_DIR
+    os.makedirs(out_dir, exist_ok=True)
+    tag = "w{}".format(result["window"]) if result.get("window") else "native"
+    fn = f"{result['arch']}__{result['shape']}__{result['mesh'].replace('x','_')}__{tag}.json"
+    with open(os.path.join(out_dir, fn), "w") as f:
+        json.dump(result, f, indent=1)
+    return os.path.join(out_dir, fn)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--window", type=int, default=0,
+                    help="sliding-window attention (long_500k extension)")
+    ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--out", type=str, default=None)
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in list_archs():
+            for s in get_arch(a).shapes:
+                cells.append((a, s.name))
+    else:
+        spec = get_arch(args.arch)
+        shapes = [args.shape] if args.shape else [s.name for s in spec.shapes]
+        cells = [(args.arch, s) for s in shapes]
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    failures = []
+    for arch, shape in cells:
+        for mp in meshes:
+            try:
+                res = analyze_cell(arch, shape, multi_pod=mp, window=args.window,
+                                   probe_layers=() if args.no_probes else (1, 2))
+                path = save_artifact(res, args.out)
+                if res["status"] == "skipped":
+                    print(f"[{arch} x {shape} @ {'multi' if mp else 'single'}] "
+                          f"SKIPPED: {res['skip_reason'][:80]}...")
+            except Exception as e:  # noqa
+                failures.append((arch, shape, mp, repr(e)))
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("\nDRY-RUN OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Serving driver: embedding runtime + query runtime, end-to-end.
+
+Smoke-scale on CPU:
+  PYTHONPATH=src python -m repro.launch.serve --smoke --n-items 128 --n-queries 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_arch, smoke_variant
+from repro.core import exits as EX
+from repro.core import preexit as PE
+from repro.core.store import EmbeddingStore
+from repro.data import synthetic as SYN
+from repro.models import imagebind as IB
+from repro.serving.engine import EmbeddingEngine
+from repro.serving.query import QueryEngine
+
+
+def build_service(spec, *, n_train: int = 256, seed: int = 0, policy="recall",
+                  params=None, lora=None, fw_kw=None):
+    """Train the pre-exit predictor from self-supervised labels, then stand up
+    the embedding + query engines."""
+    cfg, recall = spec.model, spec.recall
+    key = jax.random.PRNGKey(seed)
+    if params is None:
+        params = IB.mem_init(key, cfg, recall)
+    fw_kw = fw_kw or {}
+    data = SYN.multimodal_pairs(seed, n_train, cfg)
+    vis = jnp.asarray(data.items["vision"])
+
+    # self-supervised exit labels on a calibration split
+    all_exits = IB.mem_embed_all_exits(params, cfg, recall, "vision", vis,
+                                       lora=lora, **fw_kw)
+    labels = EX.optimal_exit_labels(all_exits["exit_embs"],
+                                    all_exits["exit_embs"][-1])
+    sup = IB.tower_forward(params, cfg, recall, "vision", vis,
+                           layer_end=recall.superficial_layers, lora=lora,
+                           **fw_kw)["pooled"][-1]
+    predictor, stats = PE.train_predictor(
+        key, sup, labels, n_exits=len(all_exits["exits"]),
+        hidden=recall.predictor_hidden, steps=150)
+
+    store = EmbeddingStore(cfg.embed_dim)
+    engine = EmbeddingEngine(params, cfg, recall, modality="vision", lora=lora,
+                             predictor_params=predictor, policy=policy,
+                             store=store, fw_kw=fw_kw)
+    query = QueryEngine(params, cfg, recall, store=store,
+                        refine_fn=engine.refine_fn(), query_modality="text",
+                        lora=lora, fw_kw=fw_kw)
+    return engine, query, {"predictor": stats, "labels": np.asarray(labels)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="recall-imagebind")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--n-items", type=int, default=128)
+    ap.add_argument("--n-queries", type=int, default=16)
+    ap.add_argument("--policy", default="recall",
+                    choices=["recall", "branchynet", "fixed", "full"])
+    args = ap.parse_args()
+
+    spec = get_arch(args.arch)
+    if args.smoke:
+        spec = smoke_variant(spec)
+    engine, query, info = build_service(spec, policy=args.policy)
+    print(f"predictor: {info['predictor']}")
+
+    data = SYN.multimodal_pairs(1, args.n_items, spec.model)
+    t0 = time.perf_counter()
+    engine.submit_batch(np.arange(args.n_items), data.items["vision"])
+    stats = engine.drain()
+    print(f"embedded {stats.n_embedded} items, avg layers "
+          f"{stats.avg_layers:.1f}/{spec.model.tower('vision').n_layers}, "
+          f"{stats.n_embedded / stats.wall_s:.1f} items/s (host wall)")
+    print(f"store: {engine.store.storage_bytes()}")
+
+    hits = 0
+    for qi in range(args.n_queries):
+        res = query.query(data.items["text"][qi], k=10)
+        hits += int(len(res.uids) > 0 and res.uids[0] == qi)
+    print(f"R@1 (untrained model, sanity only): {hits / args.n_queries:.2f}")
+
+
+if __name__ == "__main__":
+    main()

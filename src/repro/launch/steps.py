@@ -1,0 +1,794 @@
+"""Step builders: one lowered/compiled function per (arch x shape) cell.
+
+``build_step(spec, shape, mesh, multi_pod)`` returns a :class:`StepBundle`
+with the jit-able fn, abstract (ShapeDtypeStruct) args, input shardings, and
+analytic model FLOPs for the roofline usefulness ratio. The dry-run lowers
+``jax.jit(fn, in_shardings=...).lower(*abstract).compile()``; smoke tests
+materialize tiny versions of the same bundles.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import replace
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (ArchSpec, GNNConfig, LMConfig, MEMConfig,
+                                RecallConfig, RecsysConfig, ShapeConfig)
+from repro.core import plora
+from repro.data.sampler import max_sizes
+from repro.distributed import mesh_utils
+from repro.models import gnn as G
+from repro.models import imagebind as IB
+from repro.models import layers as L
+from repro.models import recsys as R
+from repro.models import transformer as T
+from repro.optim.adamw import AdamW
+from repro.optim.schedule import warmup_cosine
+
+
+@dataclasses.dataclass
+class StepBundle:
+    name: str
+    fn: Callable
+    abstract_args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any  # None => auto
+    donate_argnums: Tuple[int, ...]
+    model_flops: float           # analytic "useful" FLOPs (6ND convention)
+    rules: Dict[str, Any]
+    meta: Dict[str, Any]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def _shard(mesh, rules, axes, ab):
+    spec = mesh_utils.logical_to_spec(axes, rules)
+    spec = mesh_utils._drop_indivisible(spec, ab.shape, mesh)
+    return NamedSharding(mesh, spec)
+
+
+def _opt(total_steps: int = 10000) -> AdamW:
+    return AdamW(lr=warmup_cosine(3e-4, 20, total_steps), weight_decay=0.1,
+                 clip_norm=1.0)
+
+
+def _param_bundle(mesh, rules, schema_abstract, schema_specs):
+    shardings = mesh_utils.make_shardings(schema_specs, mesh, rules,
+                                          abstract_tree=schema_abstract)
+    return schema_abstract, shardings
+
+
+def _opt_state_abstract(opt: AdamW, params_abstract):
+    return jax.eval_shape(opt.init, params_abstract)
+
+
+def _finer_sharding(mesh, sh: NamedSharding, ab) -> NamedSharding:
+    """ZeRO-style: add the data axis on the first still-unsharded,
+    divisible dim (used for optimizer state + gradient accumulators so they
+    shard over data even when weights are TP-only)."""
+    if "data" not in mesh.shape:
+        return sh
+    spec = list(sh.spec) + [None] * (len(ab.shape) - len(sh.spec))
+    used = {a for part in spec if part
+            for a in ((part,) if isinstance(part, str) else part)}
+    if "data" in used:
+        return sh
+    dp = mesh.shape["data"]
+    for i, (dim, part) in enumerate(zip(ab.shape, spec)):
+        shard_factor = 1
+        if part:
+            for a in ((part,) if isinstance(part, str) else part):
+                shard_factor *= mesh.shape[a]
+        if part is None and dim % dp == 0:
+            spec[i] = "data"
+            return NamedSharding(mesh, P(*spec))
+        if part is not None and dim % (shard_factor * dp) == 0:
+            new = ((part, "data") if isinstance(part, str)
+                   else tuple(part) + ("data",))
+            spec[i] = new
+            return NamedSharding(mesh, P(*spec))
+    return sh
+
+
+def _opt_state_shardings(mesh, params_shardings, opt_abstract,
+                         params_abstract=None):
+    rep = NamedSharding(mesh, P())
+    if params_abstract is None:
+        return type(opt_abstract)(step=rep, m=params_shardings,
+                                  v=params_shardings)
+    fine = jax.tree.map(lambda sh, ab: _finer_sharding(mesh, sh, ab),
+                        params_shardings, params_abstract)
+    return type(opt_abstract)(step=rep, m=fine, v=fine)
+
+
+# ---------------------------------------------------------------------------
+# LM steps
+# ---------------------------------------------------------------------------
+
+
+def _lm_fw_kw(cfg: LMConfig, shape: ShapeConfig, window: int,
+               probe: bool = False, block: int = 512, block_skip: bool = False):
+    bq = min(block, shape.seq_len or block)
+    return dict(attn_impl="xla", block_q=bq, block_kv=bq, window=window,
+                block_skip=block_skip, unroll=probe)
+
+
+def _auto_lm_train_plan(cfg: LMConfig, B: int, S: int, dp: int, tp: int,
+                        n_dev: int, budget: float = 13e9
+                        ) -> Tuple[int, str]:
+    """Pick (microbatches, mode) so the estimated train-step memory fits
+    per-device HBM. mode:
+      * "fsdp"      — weights sharded over (data, model); cheapest collectives
+                      at small scale but each microbatch re-gathers weights.
+      * "fsdp_seq"  — FSDP weights + activations sequence-sharded over the
+                      model axis: cuts the per-layer carry 16x so big models
+                      train at microbatches=1 (no repeated weight gathers).
+    Empirical temp model (validated on qwen2-1.5b memory bisects):
+    temp ~= 4 x per-layer-carry + 2GB transients (+ resident weights/opt)."""
+    tokens_local = B * S // dp
+    P_bytes = cfg.n_params * 2.0
+    opt_bytes = cfg.n_params * 8.0 / n_dev
+
+    def est(mb: int, mode: str) -> float:
+        seq_div = tp if mode == "fsdp_seq" else 1
+        tl = tokens_local / mb / seq_div
+        carry = cfg.n_layers * tl * cfg.d_model * 2
+        if cfg.moe is not None:  # expert buffer ~= top_k x cf x token bytes
+            carry += 2.0 * tl * cfg.d_model * 2 * cfg.moe.top_k \
+                * cfg.moe.capacity_factor
+        weights = P_bytes / n_dev
+        grads32 = 2.0 * cfg.n_params * 4.0 / n_dev
+        # xent transients: ~3 f32 copies of the sharded logits
+        if mode == "fsdp_seq":  # unchunked, vocab model-sharded
+            xent = 3.0 * (tokens_local / mb) * (cfg.vocab / tp) * 4.0
+        else:                   # chunked over seq
+            xent = 3.0 * min(1024, S) * (B / dp / mb) * (cfg.vocab / tp) * 4.0
+        # carry multiplier: measured 4x in fsdp (full-seq flash f32
+        # transients); 2x in fsdp_seq (attention head-sharded, xent
+        # vocab-sharded — deepseek-67b bisects: mb=4 -> 16.2GiB est 9.3+buf)
+        mult = 2.0 if mode == "fsdp_seq" else 4.0
+        return mult * carry + 2e9 / seq_div + weights + opt_bytes + grads32 + xent
+
+    # prefer fewer microbatches (weight gathers repeat per microbatch): try
+    # mb=1 in both modes first, then mb=2, ...
+    mb = 1
+    while B // mb >= dp and (B % (mb * dp)) == 0:
+        for mode in ("fsdp", "fsdp_seq"):
+            if est(mb, mode) < budget:
+                return mb, mode
+        mb *= 2
+    return max(B // dp, 1), "fsdp_seq"
+
+
+def build_lm_train(spec: ArchSpec, shape: ShapeConfig, mesh, rules, *,
+                   window: int = 0, n_layers: Optional[int] = None,
+                   remat: bool = True, probe: bool = False,
+                   block: int = 512, block_skip: bool = False,
+                   microbatches: int = 0) -> StepBundle:
+    cfg: LMConfig = spec.model if n_layers is None else replace(
+        spec.model, n_layers=n_layers)
+    recall = spec.recall
+    B, S = shape.global_batch, shape.seq_len
+    dp = int(np.prod([mesh.shape[a] for a in mesh.shape if a in ("pod", "data")]))
+    tp = mesh.shape.get("model", 1)
+    mode = "fsdp"
+    if microbatches <= 0:
+        n_dev = dp * tp
+        microbatches, mode = _auto_lm_train_plan(spec.model, B, S, dp, tp, n_dev)
+        if mode == "fsdp_seq":
+            rules = dict(rules)
+            rules["seq"] = "model"   # sequence-sharded activations
+    ab_params = T.lm_abstract(cfg, recall)
+    p_shard = mesh_utils.make_shardings(T.lm_specs(cfg, recall), mesh, rules,
+                                        abstract_tree=ab_params)
+    opt = _opt()
+    ab_opt = _opt_state_abstract(opt, ab_params)
+    o_shard = _opt_state_shardings(mesh, p_shard, ab_opt,
+                                   params_abstract=ab_params)
+    g_shard = jax.tree.map(lambda sh, ab: _finer_sharding(mesh, sh, ab),
+                           p_shard, ab_params)
+    ab_batch = {"tokens": _sds((B, S), jnp.int32),
+                "labels": _sds((B, S), jnp.int32)}
+    b_shard = {k: _shard(mesh, rules, ("batch", "seq"), v)
+               for k, v in ab_batch.items()}
+    fw = _lm_fw_kw(cfg, shape, window, probe, block, block_skip)
+    # fsdp_seq: the hidden state is sequence-sharded — chunking would
+    # transpose/gather it; unchunked logits stay (data, model-on-seq) sharded.
+    chunk = S if (probe or mode == "fsdp_seq") else min(1024, S)
+    real_mb = microbatches
+    # probes lower at mb=1 (unrolling the real mb count constant-folds the
+    # attention masks for minutes); the dry-run rescales wire bytes by the
+    # real mb (token-proportional flops/bytes are mb-invariant).
+    n_mb = 1 if probe else microbatches
+
+    def loss_fn(p, mb_batch):
+        return T.lm_loss(p, cfg, recall, mb_batch["tokens"], mb_batch["labels"],
+                         remat=remat, chunk=chunk, **fw)[0]
+
+    def train_step(params, opt_state, batch):
+        if n_mb == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            mb_size = B // n_mb
+
+            def body(carry, i):
+                loss_acc, g_acc = carry
+                mb = jax.tree.map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(x, i * mb_size,
+                                                           mb_size, axis=0),
+                    batch)
+                li, gi = jax.value_and_grad(loss_fn)(params, mb)
+                # bf16 gradient reduction (Megatron-standard): halves the
+                # per-microbatch cross-data wire bytes; accumulation stays f32
+                gi = jax.tree.map(
+                    lambda g, s: jax.lax.with_sharding_constraint(
+                        g.astype(jnp.bfloat16), s), gi, g_shard)
+                return (loss_acc + li,
+                        jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                                     g_acc, gi)), None
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            zero = jax.tree.map(
+                lambda g, s: jax.lax.with_sharding_constraint(g, s), zero, g_shard)
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.float32(0.0), zero), jnp.arange(n_mb),
+                unroll=fw.get("unroll", False))
+            loss = loss / n_mb
+            grads = jax.tree.map(lambda g: g / n_mb, grads)
+        params, opt_state, metrics = opt.update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss, **metrics}
+
+    tokens = B * S
+    return StepBundle(
+        name="train_step", fn=train_step,
+        abstract_args=(ab_params, ab_opt, ab_batch),
+        in_shardings=(p_shard, o_shard, b_shard), out_shardings=None,
+        donate_argnums=(0, 1),
+        model_flops=6.0 * cfg.n_active_params * tokens,
+        rules=rules,
+        meta={"tokens": tokens, "cfg": cfg, "train": True, "remat": remat,
+              "block_q": fw["block_q"], "block_kv": fw["block_kv"],
+              "block_skip": block_skip, "microbatches": real_mb,
+              "shard_mode": mode, "seq_rule": rules.get("seq")})
+
+
+def build_lm_prefill(spec: ArchSpec, shape: ShapeConfig, mesh, rules, *,
+                     window: int = 0, n_layers: Optional[int] = None,
+                     probe: bool = False, block: int = 512,
+                     block_skip: bool = False) -> StepBundle:
+    cfg: LMConfig = spec.model if n_layers is None else replace(
+        spec.model, n_layers=n_layers)
+    recall = spec.recall
+    ab_params = T.lm_abstract(cfg, recall)
+    p_shard = mesh_utils.make_shardings(T.lm_specs(cfg, recall), mesh, rules,
+                                        abstract_tree=ab_params)
+    B, S = shape.global_batch, shape.seq_len
+    ab_tokens = _sds((B, S), jnp.int32)
+    t_shard = _shard(mesh, rules, ("batch", "seq"), ab_tokens)
+    fw = _lm_fw_kw(cfg, shape, window, probe, block, block_skip)
+
+    def prefill_step(params, tokens):
+        out = T.prefill(params, cfg, recall, tokens, **fw)
+        return {"k_cache": out["k_cache"], "v_cache": out["v_cache"],
+                "exit_embs": out["exit_embs"]}
+
+    # KV cache out-sharding: batch over dp, seq over model (keeps the 32k x
+    # full-depth cache under per-device HBM).
+    cache_axes = ("layer", "batch", "kv_seq_out", "kv_heads", "head_dim")
+    rules2 = dict(rules)
+    rules2["kv_seq_out"] = "model"
+    kc = _sds((cfg.n_layers, B, S, cfg.n_kv_heads, cfg.head_dim),
+              jnp.dtype(cfg.dtype))
+    cache_shard = _shard(mesh, rules2, cache_axes, kc)
+    out_shardings = {"k_cache": cache_shard, "v_cache": cache_shard,
+                     "exit_embs": NamedSharding(mesh, P())}
+    tokens = B * S
+    return StepBundle(
+        name="prefill_step", fn=prefill_step,
+        abstract_args=(ab_params, ab_tokens),
+        in_shardings=(p_shard, t_shard), out_shardings=out_shardings,
+        donate_argnums=(),
+        model_flops=2.0 * cfg.n_active_params * tokens,
+        rules=rules,
+        meta={"tokens": tokens, "cfg": cfg, "train": False, "remat": False,
+              "block_q": fw["block_q"], "block_kv": fw["block_kv"],
+              "block_skip": block_skip})
+
+
+def build_lm_decode(spec: ArchSpec, shape: ShapeConfig, mesh, rules, *,
+                    window: int = 0, n_layers: Optional[int] = None,
+                    probe: bool = False) -> StepBundle:
+    cfg: LMConfig = spec.model if n_layers is None else replace(
+        spec.model, n_layers=n_layers)
+    recall = spec.recall
+    ab_params = T.lm_abstract(cfg, recall)
+    p_shard = mesh_utils.make_shardings(T.lm_specs(cfg, recall), mesh, rules,
+                                        abstract_tree=ab_params)
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    ab_tok = _sds((B,), jnp.int32)
+    ab_len = _sds((B,), jnp.int32)
+    ab_cache = _sds((cfg.n_layers, B, S, cfg.n_kv_heads, cfg.head_dim), dt)
+    cache_axes = ("layer", "kv_batch", "kv_seq", "kv_heads", "head_dim")
+    c_shard = _shard(mesh, rules, cache_axes, ab_cache)
+    rep = NamedSharding(mesh, P())
+    fw_window = window
+
+    def decode_step(params, token, k_cache, v_cache, lengths):
+        logits, k2, v2 = T.decode_step(params, cfg, recall, token, k_cache,
+                                       v_cache, lengths, window=fw_window,
+                                       unroll=probe)
+        return logits, k2, v2
+
+    return StepBundle(
+        name="serve_step", fn=decode_step,
+        abstract_args=(ab_params, ab_tok, ab_cache, ab_cache, ab_len),
+        in_shardings=(p_shard, rep, c_shard, c_shard, rep),
+        out_shardings=(None, c_shard, c_shard),
+        donate_argnums=(2, 3),
+        model_flops=2.0 * cfg.n_active_params * B
+        + 2.0 * 2 * B * S * cfg.n_heads * cfg.head_dim,  # + KV attention read
+        rules=rules, meta={"cfg": cfg})
+
+
+# ---------------------------------------------------------------------------
+# GNN steps
+# ---------------------------------------------------------------------------
+
+
+def _pad_up(x: int, m: int) -> int:
+    return int(-(-x // m) * m)
+
+
+def build_gnn_step(spec: ArchSpec, shape: ShapeConfig, mesh, rules, *,
+                   n_layers: Optional[int] = None,
+                   probe: bool = False) -> StepBundle:
+    cfg: GNNConfig = replace(spec.model, d_feat=shape.d_feat or spec.model.d_feat)
+    if n_layers is not None:
+        cfg = replace(cfg, n_layers=n_layers)
+    recall = spec.recall
+    schema = G.gnn_schema(cfg, recall, embed_out=min(1024, cfg.d_hidden * 8))
+    ab_params = L.abstract_params(schema, dtype=jnp.dtype(cfg.dtype))
+    p_shard = mesh_utils.make_shardings(L.param_specs(schema), mesh, rules,
+                                        abstract_tree=ab_params)
+    opt = _opt()
+    ab_opt = _opt_state_abstract(opt, ab_params)
+    o_shard = _opt_state_shardings(mesh, p_shard, ab_opt)
+    dev = mesh_utils.mesh_device_count(mesh)
+
+    if shape.kind == "graph_batched":  # molecule: batched small graphs
+        Bg, N, E = shape.global_batch, shape.n_nodes, shape.n_edges
+        ab_g = G.Graph(
+            node_feat=_sds((Bg, N, cfg.d_feat), jnp.float32),
+            src=_sds((Bg, E), jnp.int32), dst=_sds((Bg, E), jnp.int32),
+            node_mask=_sds((Bg, N), jnp.float32),
+            edge_mask=_sds((Bg, E), jnp.float32),
+            labels=_sds((Bg, N), jnp.int32))
+        g_shard = G.Graph(*[_shard(mesh, rules, ("batch",) + (None,) * (a.ndim - 1), a)
+                            for a in ab_g])
+
+        def train_step(params, opt_state, g):
+            lossv, grads = jax.value_and_grad(lambda p: G.gnn_loss_batched(
+                p, cfg, recall, g, unroll=probe)[0])(params)
+            params, opt_state, m = opt.update(grads, opt_state, params)
+            return params, opt_state, {"loss": lossv, **m}
+        n_edges_total = Bg * E
+    else:
+        if shape.kind == "graph_mini":
+            N, E = max_sizes(shape.batch_nodes, shape.fanout)
+            N, E = _pad_up(N, dev), _pad_up(E, dev)
+        else:
+            N, E = _pad_up(shape.n_nodes, dev), _pad_up(shape.n_edges, dev)
+        ab_g = G.Graph(
+            node_feat=_sds((N, cfg.d_feat), jnp.float32),
+            src=_sds((E,), jnp.int32), dst=_sds((E,), jnp.int32),
+            node_mask=_sds((N,), jnp.float32),
+            edge_mask=_sds((E,), jnp.float32),
+            labels=_sds((N,), jnp.int32))
+        g_shard = G.Graph(
+            node_feat=_shard(mesh, rules, ("nodes", None), ab_g.node_feat),
+            src=_shard(mesh, rules, ("edges",), ab_g.src),
+            dst=_shard(mesh, rules, ("edges",), ab_g.dst),
+            node_mask=_shard(mesh, rules, ("nodes",), ab_g.node_mask),
+            edge_mask=_shard(mesh, rules, ("edges",), ab_g.edge_mask),
+            labels=_shard(mesh, rules, ("nodes",), ab_g.labels))
+
+        def train_step(params, opt_state, g):
+            lossv, grads = jax.value_and_grad(
+                lambda p: G.gnn_loss(p, cfg, recall, g, remat=not probe,
+                                     unroll=probe)[0])(params)
+            params, opt_state, m = opt.update(grads, opt_state, params)
+            return params, opt_state, {"loss": lossv, **m}
+        n_edges_total = E
+
+    # message passing "useful" FLOPs: 5 dense matmuls per node + gather/
+    # scatter per edge, x2 (MAC) x3 (fwd+bwd)
+    d = cfg.d_hidden
+    node_flops = 5 * 2 * d * d * (ab_g.node_feat.shape[-2] if ab_g.node_feat.ndim == 2
+                                  else shape.global_batch * shape.n_nodes)
+    edge_flops = 2 * 6 * d * n_edges_total
+    return StepBundle(
+        name="train_step", fn=train_step,
+        abstract_args=(ab_params, ab_opt, ab_g),
+        in_shardings=(p_shard, o_shard, g_shard), out_shardings=None,
+        donate_argnums=(0, 1),
+        model_flops=3.0 * cfg.n_layers * (node_flops + edge_flops),
+        rules=rules, meta={"cfg": cfg, "n_nodes": ab_g.node_feat.shape[0],
+                           "n_edges": n_edges_total})
+
+
+# ---------------------------------------------------------------------------
+# RecSys steps
+# ---------------------------------------------------------------------------
+
+
+def _recsys_abstract_inputs(cfg: RecsysConfig, B: int) -> Dict[str, Any]:
+    if cfg.kind == "dlrm":
+        return {"dense": _sds((B, cfg.n_dense), jnp.float32),
+                "sparse": _sds((B, len(cfg.table_vocabs)), jnp.int32),
+                "label": _sds((B,), jnp.float32)}
+    if cfg.kind == "bst":
+        return {"hist": _sds((B, cfg.seq_len), jnp.int32),
+                "target": _sds((B,), jnp.int32),
+                "other": _sds((B, R.BST_OTHER_DIM), jnp.float32),
+                "label": _sds((B,), jnp.float32)}
+    if cfg.kind == "sasrec":
+        return {"hist": _sds((B, cfg.seq_len), jnp.int32),
+                "pos": _sds((B, cfg.seq_len), jnp.int32),
+                "neg": _sds((B, cfg.seq_len), jnp.int32),
+                "target": _sds((B,), jnp.int32)}
+    if cfg.kind == "dien":
+        return {"hist": _sds((B, cfg.seq_len), jnp.int32),
+                "hist_cate": _sds((B, cfg.seq_len), jnp.int32),
+                "target": _sds((B,), jnp.int32),
+                "target_cate": _sds((B,), jnp.int32),
+                "label": _sds((B,), jnp.float32)}
+    raise ValueError(cfg.kind)
+
+
+def _recsys_flops(cfg: RecsysConfig, B: int) -> float:
+    D = cfg.embed_dim
+    if cfg.kind == "dlrm":
+        dims = (cfg.n_dense,) + cfg.bot_mlp
+        f = sum(2 * a * b for a, b in zip(dims[:-1], dims[1:]))
+        n_f = len(cfg.table_vocabs) + 1
+        f += 2 * n_f * n_f * D
+        tdims = (cfg.bot_mlp[-1] + n_f * (n_f - 1) // 2,) + cfg.top_mlp
+        f += sum(2 * a * b for a, b in zip(tdims[:-1], tdims[1:]))
+        return float(f * B)
+    if cfg.kind in ("bst", "sasrec"):
+        S = cfg.seq_len + (1 if cfg.kind == "bst" else 0)
+        per_block = 2 * S * 4 * D * D + 4 * S * S * D + 2 * S * 2 * D * (4 * D)
+        f = cfg.n_blocks * per_block
+        if cfg.kind == "bst":
+            dims = (S * D + R.BST_OTHER_DIM,) + cfg.mlp + (1,)
+            f += sum(2 * a * b for a, b in zip(dims[:-1], dims[1:]))
+        return float(f * B)
+    if cfg.kind == "dien":
+        H, S = cfg.gru_dim, cfg.seq_len
+        gru = 2 * S * 3 * (2 * D * H + H * H) * 2  # two GRU passes
+        dims = (H + 2 * D,) + cfg.mlp + (1,)
+        mlp = sum(2 * a * b for a, b in zip(dims[:-1], dims[1:]))
+        return float((gru + mlp) * B)
+    raise ValueError(cfg.kind)
+
+
+def build_recsys_step(spec: ArchSpec, shape: ShapeConfig, mesh, rules) -> StepBundle:
+    cfg: RecsysConfig = spec.model
+    schema = R.recsys_schema(cfg)
+    ab_params = L.abstract_params(schema, dtype=jnp.dtype(cfg.dtype))
+    p_shard = mesh_utils.make_shardings(L.param_specs(schema), mesh, rules,
+                                        abstract_tree=ab_params)
+    B = shape.global_batch
+    ab_in = _recsys_abstract_inputs(cfg, max(B, 1))
+    in_shard = {k: _shard(mesh, rules, ("batch",) + (None,) * (v.ndim - 1), v)
+                for k, v in ab_in.items()}
+
+    if shape.kind == "train":
+        opt = _opt()
+        ab_opt = _opt_state_abstract(opt, ab_params)
+        o_shard = _opt_state_shardings(mesh, p_shard, ab_opt)
+
+        def train_step(params, opt_state, batch):
+            lossv, grads = jax.value_and_grad(
+                lambda p: R.recsys_loss(p, cfg, batch)[0])(params)
+            params, opt_state, m = opt.update(grads, opt_state, params)
+            return params, opt_state, {"loss": lossv, **m}
+
+        return StepBundle(
+            name="train_step", fn=train_step,
+            abstract_args=(ab_params, ab_opt, ab_in),
+            in_shardings=(p_shard, o_shard, in_shard), out_shardings=None,
+            donate_argnums=(0, 1), model_flops=3.0 * _recsys_flops(cfg, B),
+            rules=rules, meta={"cfg": cfg})
+
+    if shape.kind == "serve":
+        def serve_step(params, batch):
+            return jax.nn.sigmoid(R.recsys_forward(params, cfg, batch))
+        return StepBundle(
+            name="serve_step", fn=serve_step,
+            abstract_args=(ab_params, ab_in),
+            in_shardings=(p_shard, in_shard), out_shardings=None,
+            donate_argnums=(), model_flops=_recsys_flops(cfg, B),
+            rules=rules, meta={"cfg": cfg})
+
+    if shape.kind == "retrieval":
+        C = shape.n_candidates
+        D = (cfg.bot_mlp[-1] if cfg.kind == "dlrm" else cfg.embed_dim)
+        ab_in["cand_bank"] = _sds((C, D), jnp.float32)
+        in_shard["cand_bank"] = _shard(mesh, rules, ("cands", None),
+                                       ab_in["cand_bank"])
+
+        def retrieval_step(params, batch):
+            scores = R.retrieval_scores(params, cfg, batch, C)
+            return jax.lax.top_k(scores, 100)
+
+        return StepBundle(
+            name="serve_step", fn=retrieval_step,
+            abstract_args=(ab_params, ab_in),
+            in_shardings=(p_shard, in_shard), out_shardings=None,
+            donate_argnums=(),
+            model_flops=_recsys_flops(cfg, B) + 2.0 * B * C * cfg.embed_dim,
+            rules=rules, meta={"cfg": cfg})
+    raise ValueError(shape.kind)
+
+
+# ---------------------------------------------------------------------------
+# MEM steps (paper's own architecture)
+# ---------------------------------------------------------------------------
+
+
+def build_mem_step(spec: ArchSpec, shape: ShapeConfig, mesh, rules, *,
+                   n_layers: Optional[int] = None,
+                   probe: bool = False) -> StepBundle:
+    cfg: MEMConfig = spec.model
+    if n_layers is not None:
+        cfg = replace(cfg, towers=tuple(replace(t, n_layers=min(n_layers, t.n_layers))
+                                        for t in cfg.towers))
+    recall = spec.recall
+    schema = IB.mem_schema(cfg, recall)
+    ab_params = L.abstract_params(schema, dtype=jnp.dtype(cfg.dtype))
+    p_shard = mesh_utils.make_shardings(IB.mem_specs(cfg, recall), mesh, rules,
+                                        abstract_tree=ab_params)
+    B = shape.global_batch
+    dt = jnp.dtype(cfg.dtype)
+    fw = dict(attn_impl="xla", block_q=256, block_kv=256, unroll=probe)
+
+    def ab_modal(t):
+        if t.modality == "text":
+            return _sds((B, t.n_tokens), jnp.int32)
+        return _sds((B, t.n_tokens, t.d_input), dt)
+
+    if shape.kind == "serve":  # embedding runtime: all-exit embed of vision
+        t = cfg.tower("vision")
+        ab_in = ab_modal(t)
+        i_shard = _shard(mesh, rules, ("batch", "seq", "act_embed"), ab_in)
+
+        def embed_step(params, x):
+            out = IB.mem_embed_all_exits(params, cfg, recall, "vision", x, **fw)
+            return out["exit_embs"]
+
+        flops = 2.0 * sum(12 * t2.d_model ** 2 * t2.n_layers
+                          for t2 in (t,)) * (t.n_tokens + 1) * B
+        return StepBundle("serve_step", embed_step, (ab_params, ab_in),
+                          (p_shard, i_shard), None, (), flops, rules,
+                          {"cfg": cfg})
+
+    if shape.kind == "train":  # contrastive + healing objective step
+        opt = _opt()
+        ab_opt = _opt_state_abstract(opt, ab_params)
+        o_shard = _opt_state_shardings(mesh, p_shard, ab_opt)
+        ab_batch = {t.modality: ab_modal(t) for t in cfg.towers}
+        b_shard = {k: _shard(mesh, rules, ("batch",) + (None,) * (v.ndim - 1), v)
+                   for k, v in ab_batch.items()}
+
+        def train_step(params, opt_state, batch):
+            lossv, grads = jax.value_and_grad(
+                lambda p: IB.mem_contrastive_loss(p, cfg, recall, batch,
+                                                  remat=True, **fw)[0])(params)
+            params, opt_state, m = opt.update(grads, opt_state, params)
+            return params, opt_state, {"loss": lossv, **m}
+
+        flops = 3.0 * sum(2 * 12 * t.d_model ** 2 * t.n_layers * (t.n_tokens + 1)
+                          for t in cfg.towers) * B
+        return StepBundle("train_step", train_step,
+                          (ab_params, ab_opt, ab_batch),
+                          (p_shard, o_shard, b_shard), None, (0, 1),
+                          flops, rules, {"cfg": cfg})
+
+    if shape.kind == "retrieval":  # query runtime: text embed + bank top-k
+        t = cfg.tower("text")
+        ab_q = ab_modal(t)
+        C = shape.n_candidates
+        ab_bank = _sds((C, cfg.embed_dim), dt)
+        q_shard = _shard(mesh, rules, ("batch", "seq"), ab_q)
+        bank_shard = _shard(mesh, rules, ("cands", "act_embed"), ab_bank)
+
+        def query_step(params, q_tokens, bank):
+            z = IB.mem_embed(params, cfg, recall, "text", q_tokens, **fw)
+            sims = z.astype(jnp.float32) @ bank.astype(jnp.float32).T
+            return jax.lax.top_k(sims, 10)
+
+        flops = (2 * 12 * t.d_model ** 2 * t.n_layers * (t.n_tokens + 1) * B
+                 + 2.0 * B * C * cfg.embed_dim)
+        return StepBundle("serve_step", query_step, (ab_params, ab_q, ab_bank),
+                          (p_shard, q_shard, bank_shard), None, (),
+                          flops, rules, {"cfg": cfg})
+    raise ValueError(shape.kind)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch
+# ---------------------------------------------------------------------------
+
+
+def build_step(spec: ArchSpec, shape: ShapeConfig, mesh: Mesh, *,
+               multi_pod: bool = False, window: int = 0,
+               n_layers: Optional[int] = None, probe: bool = False,
+               rules_overrides: Optional[Dict[str, Any]] = None,
+               **builder_kw) -> StepBundle:
+    fam = spec.family
+    if fam == "lm":
+        long_ctx = shape.kind == "decode" and shape.global_batch <= 8
+        rules = mesh_utils.lm_rules(multi_pod, seq_shard_kv=long_ctx)
+        if shape.kind == "decode" and not long_ctx:
+            # decode_32k: shard the KV cache over batch AND seq if needed
+            rules["kv_seq"] = "model"
+        if rules_overrides:
+            rules.update(rules_overrides)
+        if shape.kind == "train":
+            return build_lm_train(spec, shape, mesh, rules, window=window,
+                                  n_layers=n_layers, probe=probe, **builder_kw)
+        if shape.kind == "prefill":
+            return build_lm_prefill(spec, shape, mesh, rules, window=window,
+                                    n_layers=n_layers, probe=probe, **builder_kw)
+        if shape.kind == "decode":
+            return build_lm_decode(spec, shape, mesh, rules, window=window,
+                                   n_layers=n_layers, probe=probe)
+        raise ValueError(shape.kind)
+    if fam == "gnn":
+        rules = mesh_utils.gnn_rules(multi_pod)
+        if rules_overrides:
+            rules.update(rules_overrides)
+        return build_gnn_step(spec, shape, mesh, rules, n_layers=n_layers,
+                              probe=probe)
+    if fam == "recsys":
+        rules = mesh_utils.recsys_rules(multi_pod)
+        if rules_overrides:
+            rules.update(rules_overrides)
+        return build_recsys_step(spec, shape, mesh, rules)
+    if fam == "mem":
+        rules = mesh_utils.mem_rules(multi_pod)
+        if rules_overrides:
+            rules.update(rules_overrides)
+        return build_mem_step(spec, shape, mesh, rules, n_layers=n_layers,
+                              probe=probe)
+    raise ValueError(fam)
+
+
+# ---------------------------------------------------------------------------
+# Analytic HBM traffic (ideal-fusion) — the roofline memory term.
+# CPU-XLA "bytes accessed" counts every unfused intermediate (~2-3 orders too
+# high vs a fused TPU program); these closed-form models count only
+# irreducible HBM traffic: weight reads, optimizer state r/w, layer-boundary
+# activations (incl. remat recompute), KV cache, embedding-row gathers.
+# ---------------------------------------------------------------------------
+
+
+def lm_train_hbm_bytes(cfg: LMConfig, B: int, S: int, n_dev: int, tp: int,
+                       dp: int, microbatches: int) -> float:
+    P = cfg.n_params
+    Pa = cfg.n_active_params
+    tok_local = B * S / dp
+    dt = 2.0
+    weights = 4.0 * Pa * dt / tp              # fwd + remat fwd + 2x bwd reads
+    opt = 6.0 * P * 4.0 / n_dev               # m,v r/w + grad read + param r/w
+    acts = 12.0 * cfg.n_layers * tok_local * cfg.d_model * dt
+    kv_attn = (cfg.n_layers * (B / dp) * (S / 512.0) * S
+               * cfg.n_kv_heads * cfg.head_dim * dt * 2 * 3)  # kv reread/blocks
+    xent = 3.0 * tok_local * (cfg.vocab / tp) * 4.0
+    return weights + opt + acts + kv_attn + xent
+
+
+def lm_prefill_hbm_bytes(cfg: LMConfig, B: int, S: int, n_dev: int, tp: int,
+                         dp: int) -> float:
+    Pa = cfg.n_active_params
+    tok_local = B * S / dp
+    dt = 2.0
+    weights = Pa * dt / tp
+    acts = 4.0 * cfg.n_layers * tok_local * cfg.d_model * dt
+    kv_out = 2.0 * cfg.n_layers * (B * S / n_dev) * cfg.n_kv_heads * cfg.head_dim * dt
+    kv_attn = (cfg.n_layers * (B / dp) * (S / 512.0) * S
+               * cfg.n_kv_heads * cfg.head_dim * dt * 2)
+    return weights + acts + kv_out + kv_attn
+
+
+def lm_decode_hbm_bytes(cfg: LMConfig, B: int, S: int, n_dev: int) -> float:
+    """Decode roofline = read every active weight + the whole KV cache once."""
+    dt = 2.0
+    weights = cfg.n_active_params * dt / n_dev
+    kv = 2.0 * cfg.n_layers * B * S * cfg.n_kv_heads * cfg.head_dim * dt / n_dev
+    return weights + kv + 2.0 * B * cfg.vocab * 4.0 / n_dev
+
+
+def gnn_hbm_bytes(cfg: GNNConfig, n_nodes: int, n_edges: int, n_dev: int,
+                  train: bool) -> float:
+    d = cfg.d_hidden
+    passes = 3.0 if train else 1.0
+    per_layer = (6.0 * n_edges * d + 6.0 * n_nodes * d) * 4.0 / n_dev
+    return passes * cfg.n_layers * per_layer + n_nodes * cfg.d_feat * 4.0 / n_dev
+
+
+def recsys_hbm_bytes(cfg: RecsysConfig, B: int, n_dev: int, kind: str,
+                     n_candidates: int = 0) -> float:
+    D = cfg.embed_dim
+    passes = 3.0 if kind == "train" else 1.0
+    if cfg.kind == "dlrm":
+        rows = B * len(cfg.table_vocabs)
+    elif cfg.kind == "dien":
+        rows = B * (2 * cfg.seq_len + 2)
+    else:
+        rows = B * (cfg.seq_len + 1)
+    gather = passes * rows * D * 4.0 / n_dev
+    dense_p = sum(a * b for a, b in zip(
+        ((cfg.n_dense,) + cfg.bot_mlp)[:-1], cfg.bot_mlp)) if cfg.kind == "dlrm" else 0
+    mlp = passes * 4.0 * (dense_p + sum(cfg.mlp) * 1000) * 4.0 / max(n_dev, 1)
+    cand = n_candidates * D * 4.0 / n_dev if n_candidates else 0.0
+    acts = passes * B * max(cfg.seq_len, 1) * D * 4.0 / n_dev * 6.0
+    return gather + mlp + cand + acts
+
+
+def mem_hbm_bytes(cfg: MEMConfig, B: int, n_dev: int, tp: int, kind: str,
+                  modalities=None) -> float:
+    dt = 2.0
+    total = 0.0
+    passes = 4.0 if kind == "train" else 1.0
+    towers = [t for t in cfg.towers
+              if modalities is None or t.modality in modalities]
+    for t in towers:
+        P_t = 12 * t.d_model ** 2 * t.n_layers
+        tok_local = B * (t.n_tokens + 1) / (n_dev / tp)
+        total += passes * P_t * dt / tp
+        total += (12.0 if kind == "train" else 4.0) * t.n_layers * tok_local * t.d_model * dt
+    return total
+
+
+def analytic_hbm_bytes_for(spec: ArchSpec, shape: ShapeConfig,
+                           bundle: StepBundle, mesh, n_dev: int) -> float:
+    """Dispatch the ideal-fusion HBM model for a compiled cell (per device)."""
+    dp = int(np.prod([mesh.shape[a] for a in mesh.shape
+                      if a in ("pod", "data")]))
+    tp = mesh.shape.get("model", 1)
+    if spec.family == "lm":
+        cfg = bundle.meta["cfg"]
+        if bundle.name == "train_step":
+            return lm_train_hbm_bytes(cfg, shape.global_batch, shape.seq_len,
+                                      n_dev, tp, dp,
+                                      bundle.meta.get("microbatches", 1))
+        if bundle.name == "prefill_step":
+            return lm_prefill_hbm_bytes(cfg, shape.global_batch, shape.seq_len,
+                                        n_dev, tp, dp)
+        return lm_decode_hbm_bytes(cfg, shape.global_batch, shape.seq_len, n_dev)
+    if spec.family == "gnn":
+        n_nodes = bundle.meta.get("n_nodes", shape.n_nodes)
+        n_edges = bundle.meta.get("n_edges", shape.n_edges)
+        return gnn_hbm_bytes(bundle.meta["cfg"], n_nodes, n_edges, n_dev, True)
+    if spec.family == "recsys":
+        return recsys_hbm_bytes(spec.model, shape.global_batch, n_dev,
+                                shape.kind, shape.n_candidates)
+    if spec.family == "mem":
+        mods = None if shape.kind == "train" else (
+            ("vision",) if shape.kind == "serve" else ("text",))
+        extra = (shape.n_candidates * spec.model.embed_dim * 2.0 / n_dev
+                 if shape.kind == "retrieval" else 0.0)
+        return mem_hbm_bytes(spec.model, shape.global_batch, n_dev, tp,
+                             shape.kind, mods) + extra
+    return 0.0

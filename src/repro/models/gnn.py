@@ -1,0 +1,170 @@
+"""GatedGCN (Bresson & Laurent; arXiv:1711.07553 / benchmarking-gnns config).
+
+Message passing via ``jax.ops.segment_sum`` over an explicit edge list
+(src, dst) — this *is* the TPU-native SpMM (see kernel_taxonomy §GNN; JAX has
+no CSR). Residual + LayerNorm variant (batch-independent; the
+benchmarking-gnns BN is replaced by LN for static SPMD shapes — noted in
+DESIGN.md).
+
+Recall integration: each message-passing round is an exit; coarse node/graph
+embeddings are tapped per round through the shared exit head.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import GNNConfig, RecallConfig
+from repro.distributed.mesh_utils import shard_activation
+from repro.models import layers as L
+from repro.models.layers import ParamDef, Schema
+
+
+class Graph(NamedTuple):
+    """Static-shape (padded) graph batch.
+
+    node_feat: (N, F); src/dst: (E,) int32 edge endpoints (edge j->i is
+    src=j, dst=i); node_mask/edge_mask: 1.0 for real entries, 0.0 padding;
+    labels: (N,) int32 node labels (-1 where unlabeled).
+    """
+
+    node_feat: jax.Array
+    src: jax.Array
+    dst: jax.Array
+    node_mask: jax.Array
+    edge_mask: jax.Array
+    labels: jax.Array
+
+
+def gnn_schema(cfg: GNNConfig, recall: RecallConfig, embed_out: int = 1024) -> Schema:
+    d = cfg.d_hidden
+    Ld = (cfg.n_layers,)
+    la = ("layer",)
+    return {
+        "w_in": ParamDef((cfg.d_feat, d), ("act_embed", "hidden"), "fan_in"),
+        "b_in": ParamDef((d,), ("hidden",), "zeros"),
+        "e_init": ParamDef((d,), ("hidden",), "normal", 0.02),
+        "layers": {
+            "A": ParamDef(Ld + (d, d), la + ("hidden", "mlp"), "fan_in"),
+            "B": ParamDef(Ld + (d, d), la + ("hidden", "mlp"), "fan_in"),
+            "C": ParamDef(Ld + (d, d), la + ("hidden", "mlp"), "fan_in"),
+            "D": ParamDef(Ld + (d, d), la + ("hidden", "mlp"), "fan_in"),
+            "E": ParamDef(Ld + (d, d), la + ("hidden", "mlp"), "fan_in"),
+            "ln_h_s": ParamDef(Ld + (d,), la + ("hidden",), "ones"),
+            "ln_h_b": ParamDef(Ld + (d,), la + ("hidden",), "zeros"),
+            "ln_e_s": ParamDef(Ld + (d,), la + ("hidden",), "ones"),
+            "ln_e_b": ParamDef(Ld + (d,), la + ("hidden",), "zeros"),
+        },
+        "head": ParamDef((d, cfg.n_classes), ("hidden", "act_embed"), "fan_in"),
+        "exit_head": {
+            "norm": L.rmsnorm_schema(d),
+            "proj": ParamDef((d, embed_out), ("hidden", "act_embed"), "fan_in"),
+        },
+    }
+
+
+def gnn_init(key, cfg: GNNConfig, recall: RecallConfig, embed_out: int = 1024):
+    return L.init_params(key, gnn_schema(cfg, recall, embed_out),
+                         dtype=jnp.dtype(cfg.dtype))
+
+
+def gnn_specs(cfg: GNNConfig, recall: RecallConfig, embed_out: int = 1024):
+    return L.param_specs(gnn_schema(cfg, recall, embed_out))
+
+
+def _layer(pl_: Schema, h: jax.Array, e: jax.Array, g: Graph, eps: float,
+           n_nodes: int):
+    """One GatedGCN round. h (N,d), e (E,d)."""
+    hs = jnp.take(h, g.src, axis=0, mode="clip")  # (E, d)
+    hd = jnp.take(h, g.dst, axis=0, mode="clip")
+    e_pre = (e @ pl_["C"] + hd @ pl_["D"] + hs @ pl_["E"])
+    e_pre = L.layernorm(e_pre, pl_["ln_e_s"], pl_["ln_e_b"], eps)
+    e_new = e + jax.nn.relu(e_pre)
+    eta = jax.nn.sigmoid(e_new) * g.edge_mask[:, None]  # (E, d)
+    eta = shard_activation(eta, ("edges", "hidden"))
+    msg = eta * (hs @ pl_["B"])
+    num = jax.ops.segment_sum(msg, g.dst, num_segments=n_nodes)
+    den = jax.ops.segment_sum(eta, g.dst, num_segments=n_nodes)
+    agg = num / (den + 1e-6)
+    h_pre = L.layernorm(h @ pl_["A"] + agg, pl_["ln_h_s"], pl_["ln_h_b"], eps)
+    h_new = h + jax.nn.relu(h_pre)
+    h_new = shard_activation(h_new, ("nodes", "hidden"))
+    return h_new, e_new
+
+
+def gnn_forward(params: Schema, cfg: GNNConfig, recall: RecallConfig, g: Graph,
+                *, layer_start: int = 0, layer_end: Optional[int] = None,
+                e_state: Optional[jax.Array] = None,
+                h_state: Optional[jax.Array] = None,
+                collect_pooled: bool = False, remat: bool = False,
+                unroll: bool = False):
+    """Returns dict: h (N,d), e (E,d), logits (N,C), pooled (L,d) graph emb."""
+    n_nodes = g.node_feat.shape[0]
+    layer_end = cfg.n_layers if layer_end is None else layer_end
+    if h_state is None:
+        h = g.node_feat @ params["w_in"] + params["b_in"]
+    else:
+        h = h_state
+    e = (jnp.broadcast_to(params["e_init"], (g.src.shape[0], cfg.d_hidden))
+         if e_state is None else e_state)
+    lp = jax.tree.map(lambda a: a[layer_start:layer_end], params["layers"])
+
+    def body(carry, pl_):
+        h, e = carry
+        h, e = _layer(pl_, h, e, g, cfg.norm_eps, n_nodes)
+        ys = {}
+        if collect_pooled:
+            m = g.node_mask[:, None]
+            ys["pooled"] = (h * m).sum(0) / jnp.maximum(m.sum(), 1.0)
+        return (h, e), ys
+
+    if remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    (h, e), ys = lax.scan(body, (h, e), lp, unroll=unroll)
+    out = {"h": h, "e": e, "logits": h @ params["head"]}
+    if collect_pooled:
+        out["pooled"] = ys["pooled"]
+    return out
+
+
+def gnn_loss(params: Schema, cfg: GNNConfig, recall: RecallConfig, g: Graph,
+             **kw) -> Tuple[jax.Array, Dict]:
+    out = gnn_forward(params, cfg, recall, g, **kw)
+    valid = (g.labels >= 0) & (g.node_mask > 0)
+    labels = jnp.maximum(g.labels, 0)
+    loss = L.cross_entropy(out["logits"], labels, mask=valid.astype(jnp.float32))
+    acc = jnp.sum((jnp.argmax(out["logits"], -1) == labels) * valid) / jnp.maximum(valid.sum(), 1)
+    return loss, {"acc": acc}
+
+
+def gnn_exit_embeddings(params: Schema, cfg: GNNConfig, recall: RecallConfig,
+                        g: Graph) -> jax.Array:
+    """Coarse graph embeddings at each exit round: (n_exits, E_out)."""
+    out = gnn_forward(params, cfg, recall, g, collect_pooled=True)
+    exits = recall.exit_layers(cfg.n_layers)
+    idx = jnp.array([e - 1 for e in exits])
+    pooled = out["pooled"][idx]
+    h = L.rmsnorm(pooled, params["exit_head"]["norm"], cfg.norm_eps)
+    emb = h.astype(jnp.float32) @ params["exit_head"]["proj"].astype(jnp.float32)
+    return L.l2_normalize(emb)
+
+
+# Batched small graphs (molecule shape): vmap the single-graph forward.
+def gnn_forward_batched(params, cfg: GNNConfig, recall: RecallConfig, gs: Graph,
+                        **kw):
+    fn = lambda nf, s, d, nm, em, lb: gnn_forward(
+        params, cfg, recall, Graph(nf, s, d, nm, em, lb), **kw)
+    return jax.vmap(fn)(gs.node_feat, gs.src, gs.dst, gs.node_mask,
+                        gs.edge_mask, gs.labels)
+
+
+def gnn_loss_batched(params, cfg, recall, gs: Graph, **kw):
+    out = gnn_forward_batched(params, cfg, recall, gs, **kw)
+    valid = (gs.labels >= 0) & (gs.node_mask > 0)
+    labels = jnp.maximum(gs.labels, 0)
+    loss = L.cross_entropy(out["logits"], labels, mask=valid.astype(jnp.float32))
+    return loss, {}

@@ -1,0 +1,155 @@
+"""ImageBind-style multimodal embedding model (MEM).
+
+Per-modality transformer towers bind into one shared embedding space
+(contrastive InfoNCE, vision as the anchor — ImageBind §3). Modality
+frontends are stubs per the brief: ``input`` is precomputed patch/frame
+features for vision/audio/imu and token ids for text; each tower adds a CLS
+token + learned positions and reuses the scan-based transformer stack, so
+*all* Recall machinery (exit taps, static prefix/suffix slicing, P-LoRA)
+applies per tower for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LMConfig, MEMConfig, RecallConfig, TowerConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.layers import ParamDef, Schema
+
+
+def tower_lm_cfg(t: TowerConfig, mem: MEMConfig) -> LMConfig:
+    """Encoder-flavoured LMConfig for one tower (bidirectional, no RoPE)."""
+    return LMConfig(
+        n_layers=t.n_layers, d_model=t.d_model, n_heads=t.n_heads,
+        n_kv_heads=t.n_heads, d_ff=t.d_ff, vocab=max(t.vocab, 1),
+        causal=False, rope_theta=0.0, dtype=mem.dtype, norm_eps=mem.norm_eps)
+
+
+def tower_schema(t: TowerConfig, mem: MEMConfig, recall: RecallConfig) -> Schema:
+    cfg = tower_lm_cfg(t, mem)
+    s = T.lm_schema(cfg, recall, embed_out=mem.embed_dim, with_lm_head=False)
+    del s["embed"]
+    if t.vocab:  # discrete-token frontend
+        s["tok_emb"] = ParamDef((t.vocab, t.d_model), ("vocab", "embed"), "embed")
+    else:        # stub frontend: precomputed frame/patch/token embeddings
+        s["proj_in"] = ParamDef((t.d_input, t.d_model), ("act_embed", "embed"), "fan_in")
+    s["cls"] = ParamDef((1, t.d_model), (None, "embed"), "normal", 0.02)
+    s["pos"] = ParamDef((t.n_tokens + 1, t.d_model), ("seq", "embed"), "normal", 0.02)
+    return s
+
+
+def mem_schema(cfg: MEMConfig, recall: RecallConfig) -> Schema:
+    return {
+        "towers": {t.modality: tower_schema(t, cfg, recall) for t in cfg.towers},
+        "logit_scale": ParamDef((), (), "zeros"),
+    }
+
+
+def mem_init(key, cfg: MEMConfig, recall: RecallConfig):
+    p = L.init_params(key, mem_schema(cfg, recall), dtype=jnp.dtype(cfg.dtype))
+    p["logit_scale"] = jnp.log(jnp.float32(cfg.logit_scale_init)).astype(
+        jnp.dtype(cfg.dtype))
+    return p
+
+
+def mem_specs(cfg: MEMConfig, recall: RecallConfig):
+    return L.param_specs(mem_schema(cfg, recall))
+
+
+def _frontend(tp: Schema, t: TowerConfig, inputs: jax.Array) -> jax.Array:
+    """inputs -> (B, n_tokens+1, d_model) with CLS prepended."""
+    if t.vocab:
+        x = jnp.take(tp["tok_emb"], inputs, axis=0, mode="clip")
+    else:
+        x = inputs @ tp["proj_in"].astype(inputs.dtype)
+    B = x.shape[0]
+    cls = jnp.broadcast_to(tp["cls"][None], (B, 1, x.shape[-1])).astype(x.dtype)
+    x = jnp.concatenate([cls, x], axis=1)
+    return x + tp["pos"][None, : x.shape[1]].astype(x.dtype)
+
+
+def tower_forward(params: Schema, cfg: MEMConfig, recall: RecallConfig,
+                  modality: str, inputs: jax.Array, *,
+                  layer_start: int = 0, layer_end: Optional[int] = None,
+                  h_state: Optional[jax.Array] = None,
+                  lora: Optional[Dict] = None, collect_pooled: bool = True,
+                  **fw_kw):
+    """Generic tower run over layers [start, end); h_state short-circuits the
+    frontend (cached-activation reuse, §3.4)."""
+    t = cfg.tower(modality)
+    tcfg = tower_lm_cfg(t, cfg)
+    tp = params["towers"][modality]
+    x = _frontend(tp, t, inputs) if h_state is None else h_state
+    return T.forward_hidden(tp, tcfg, recall, embeds=x, lora=lora,
+                            layer_start=layer_start, layer_end=layer_end,
+                            collect_pooled=collect_pooled, pool="cls", **fw_kw)
+
+
+def mem_embed(params: Schema, cfg: MEMConfig, recall: RecallConfig,
+              modality: str, inputs: jax.Array, *, exit_layer: Optional[int] = None,
+              lora: Optional[Dict] = None, **fw_kw) -> jax.Array:
+    """Fine-grained (exit_layer=None) or coarse embedding: (B, embed_dim)."""
+    t = cfg.tower(modality)
+    out = tower_forward(params, cfg, recall, modality, inputs,
+                        layer_end=exit_layer, lora=lora, **fw_kw)
+    tp = params["towers"][modality]
+    return T.exit_embedding(tp, out["pooled"][-1], cfg.norm_eps)
+
+
+def mem_embed_all_exits(params: Schema, cfg: MEMConfig, recall: RecallConfig,
+                        modality: str, inputs: jax.Array,
+                        lora: Optional[Dict] = None, **fw_kw):
+    """(n_exits, B, E) embeddings at every exit + per-layer hidden pool."""
+    t = cfg.tower(modality)
+    out = tower_forward(params, cfg, recall, modality, inputs, lora=lora, **fw_kw)
+    exits = recall.exit_layers(t.n_layers)
+    idx = jnp.array([e - 1 for e in exits])
+    tp = params["towers"][modality]
+    embs = T.exit_embedding(tp, out["pooled"][idx], cfg.norm_eps)
+    return {"exit_embs": embs, "exits": exits, "pooled": out["pooled"]}
+
+
+def mem_refine(params: Schema, cfg: MEMConfig, recall: RecallConfig,
+               modality: str, h_cached: jax.Array, start: int,
+               lora: Optional[Dict] = None, **fw_kw) -> jax.Array:
+    """Live-encoder refinement from cached layer-`start` activations."""
+    out = tower_forward(params, cfg, recall, modality, inputs=None,
+                        h_state=h_cached, layer_start=start, lora=lora, **fw_kw)
+    tp = params["towers"][modality]
+    return T.exit_embedding(tp, out["pooled"][-1], cfg.norm_eps)
+
+
+def info_nce(za: jax.Array, zb: jax.Array, logit_scale: jax.Array) -> jax.Array:
+    """Symmetric InfoNCE between aligned batches of normalized embeddings."""
+    scale = jnp.exp(logit_scale.astype(jnp.float32))
+    logits = scale * (za.astype(jnp.float32) @ zb.astype(jnp.float32).T)
+    labels = jnp.arange(za.shape[0])
+    l_a = L.cross_entropy(logits, labels)
+    l_b = L.cross_entropy(logits.T, labels)
+    return 0.5 * (l_a + l_b)
+
+
+def mem_contrastive_loss(params: Schema, cfg: MEMConfig, recall: RecallConfig,
+                         batch: Dict[str, jax.Array], *, anchor: str = "vision",
+                         lora: Optional[Dict] = None, **fw_kw
+                         ) -> Tuple[jax.Array, Dict]:
+    """ImageBind objective: bind every modality to the anchor."""
+    za = mem_embed(params, cfg, recall, anchor, batch[anchor], lora=lora, **fw_kw)
+    total, metrics = jnp.float32(0.0), {}
+    n = 0
+    for t in cfg.towers:
+        m = t.modality
+        if m == anchor or m not in batch:
+            continue
+        zb = mem_embed(params, cfg, recall, m, batch[m], lora=lora, **fw_kw)
+        li = info_nce(za, zb, params["logit_scale"])
+        metrics[f"nce_{m}"] = li
+        total = total + li
+        n += 1
+    return total / max(n, 1), metrics

@@ -1,0 +1,358 @@
+"""RecSys model zoo: DLRM (MLPerf), BST, SASRec, DIEN.
+
+The hot path is the sparse embedding lookup. JAX has no EmbeddingBag — we
+implement it as ``jnp.take`` + masked reduce (fixed-slot multi-hot) and a
+ragged ``segment_sum`` variant; tables are row-sharded over ("data","model")
+per repro.distributed.mesh_utils.recsys_rules (the standard DLRM layout).
+
+``retrieval_scores`` implements the 1M-candidate retrieval cell as one
+batched dot against the item table (no loops) and feeds the fused Pallas
+top-k kernel at serving time.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import RecallConfig, RecsysConfig
+from repro.distributed.mesh_utils import shard_activation
+from repro.models import layers as L
+from repro.models.layers import ParamDef, Schema
+
+# ---------------------------------------------------------------------------
+# EmbeddingBag
+# ---------------------------------------------------------------------------
+
+
+def embedding_bag(table: jax.Array, ids: jax.Array,
+                  mask: Optional[jax.Array] = None, mode: str = "sum") -> jax.Array:
+    """Fixed-slot multi-hot bag: ids (B, L) -> (B, D)."""
+    rows = jnp.take(table, ids, axis=0, mode="clip")  # (B, L, D)
+    if mask is not None:
+        rows = rows * mask[..., None].astype(rows.dtype)
+    s = rows.sum(axis=1)
+    if mode == "sum":
+        return s
+    if mode == "mean":
+        n = (mask.sum(axis=1, keepdims=True) if mask is not None
+             else jnp.full((ids.shape[0], 1), ids.shape[1], rows.dtype))
+        return s / jnp.maximum(n, 1.0)
+    raise ValueError(mode)
+
+
+def embedding_bag_ragged(table: jax.Array, ids: jax.Array,
+                         segment_ids: jax.Array, num_bags: int,
+                         weights: Optional[jax.Array] = None,
+                         mode: str = "sum") -> jax.Array:
+    """Ragged bag: flat ids (T,) grouped by segment_ids (T,) -> (num_bags, D)."""
+    rows = jnp.take(table, ids, axis=0, mode="clip")
+    if weights is not None:
+        rows = rows * weights[:, None].astype(rows.dtype)
+    s = jax.ops.segment_sum(rows, segment_ids, num_segments=num_bags)
+    if mode == "sum":
+        return s
+    if mode == "mean":
+        cnt = jax.ops.segment_sum(jnp.ones_like(segment_ids, rows.dtype),
+                                  segment_ids, num_segments=num_bags)
+        return s / jnp.maximum(cnt[:, None], 1.0)
+    raise ValueError(mode)
+
+
+# ---------------------------------------------------------------------------
+# Small encoder block (BST / SASRec)
+# ---------------------------------------------------------------------------
+
+
+def _block_schema(d: int, n_heads: int, d_ff: int, prefix_dims=()) -> Schema:
+    return {
+        "attn": L.attn_schema(d, n_heads, n_heads, d // n_heads, qkv_bias=True),
+        "ln1_s": ParamDef((d,), ("embed",), "ones"),
+        "ln1_b": ParamDef((d,), ("embed",), "zeros"),
+        "ln2_s": ParamDef((d,), ("embed",), "ones"),
+        "ln2_b": ParamDef((d,), ("embed",), "zeros"),
+        "ffn": L.mlp_schema((d, d_ff, d)),
+    }
+
+
+def _block_apply(p: Schema, x: jax.Array, *, causal: bool) -> jax.Array:
+    B, S, d = x.shape
+    h = L.layernorm(x, p["ln1_s"], p["ln1_b"])
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    q, k, v = L.attn_project_qkv(p["attn"], h, rope_theta=0.0, positions=positions)
+    mask = L.attention_scores_mask(S, S, causal=causal)
+    o = L.multihead_attention(q, k, v, mask=mask)
+    x = x + L.attn_output(p["attn"], o)
+    h = L.layernorm(x, p["ln2_s"], p["ln2_b"])
+    return x + L.mlp_apply(p["ffn"], h, act=jax.nn.gelu)
+
+
+# ---------------------------------------------------------------------------
+# DLRM (arXiv:1906.00091, MLPerf config)
+# ---------------------------------------------------------------------------
+
+
+def dlrm_schema(cfg: RecsysConfig) -> Schema:
+    D = cfg.embed_dim
+    s: Schema = {"tables": {
+        f"t{i:02d}": ParamDef((v, D), ("table_rows", "embed"), "embed")
+        for i, v in enumerate(cfg.table_vocabs)}}
+    s["bot"] = L.mlp_schema((cfg.n_dense,) + cfg.bot_mlp)
+    n_f = len(cfg.table_vocabs) + 1
+    n_inter = n_f * (n_f - 1) // 2
+    s["top"] = L.mlp_schema((cfg.bot_mlp[-1] + n_inter,) + cfg.top_mlp)
+    return s
+
+
+def dlrm_forward(params: Schema, cfg: RecsysConfig, inputs: Dict) -> jax.Array:
+    dense, sparse = inputs["dense"], inputs["sparse"]  # (B,13), (B,26)
+    B = dense.shape[0]
+    d = L.mlp_apply(params["bot"], dense, act=jax.nn.relu, final_act=True)
+    d = shard_activation(d, ("batch", "act_embed"))
+    embs = [embedding_bag(params["tables"][f"t{i:02d}"], sparse[:, i:i + 1])
+            for i in range(len(cfg.table_vocabs))]
+    x = jnp.stack([d] + embs, axis=1)  # (B, 27, D)
+    x = shard_activation(x, ("batch", "seq", "act_embed"))
+    z = jnp.einsum("bnd,bmd->bnm", x, x)  # (B, 27, 27)
+    iu, ju = np.triu_indices(x.shape[1], k=1)
+    inter = z[:, iu, ju]  # (B, n_inter)
+    top_in = jnp.concatenate([d, inter], axis=-1)
+    logit = L.mlp_apply(params["top"], top_in, act=jax.nn.relu)
+    return logit[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# BST (arXiv:1905.06874)
+# ---------------------------------------------------------------------------
+
+BST_OTHER_DIM = 64  # user/item/context "other features" side input
+
+
+def bst_schema(cfg: RecsysConfig) -> Schema:
+    D = cfg.embed_dim
+    S = cfg.seq_len + 1  # behaviour sequence + target item
+    d_ff = 4 * D
+    s: Schema = {
+        "item_emb": ParamDef((cfg.item_vocab, D), ("table_rows", "embed"), "embed"),
+        "pos_emb": ParamDef((S, D), ("seq", "embed"), "embed"),
+        "blocks": {f"b{i}": _block_schema(D, cfg.n_heads, d_ff)
+                   for i in range(cfg.n_blocks)},
+        "mlp": L.mlp_schema((S * D + BST_OTHER_DIM,) + cfg.mlp + (1,)),
+    }
+    return s
+
+
+def bst_forward(params: Schema, cfg: RecsysConfig, inputs: Dict) -> jax.Array:
+    hist, target = inputs["hist"], inputs["target"]  # (B,S), (B,)
+    other = inputs["other"]  # (B, BST_OTHER_DIM)
+    seq = jnp.concatenate([hist, target[:, None]], axis=1)
+    x = jnp.take(params["item_emb"], seq, axis=0, mode="clip")
+    x = x + params["pos_emb"][None]
+    for i in range(cfg.n_blocks):
+        x = _block_apply(params["blocks"][f"b{i}"], x, causal=False)
+    flat = x.reshape(x.shape[0], -1)
+    mlp_in = jnp.concatenate([flat, other], axis=-1)
+    logit = L.mlp_apply(params["mlp"], mlp_in,
+                        act=lambda v: jax.nn.leaky_relu(v, 0.01))
+    return logit[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# SASRec (arXiv:1808.09781)
+# ---------------------------------------------------------------------------
+
+
+def sasrec_schema(cfg: RecsysConfig) -> Schema:
+    D = cfg.embed_dim
+    return {
+        "item_emb": ParamDef((cfg.item_vocab, D), ("table_rows", "embed"), "embed"),
+        "pos_emb": ParamDef((cfg.seq_len, D), ("seq", "embed"), "embed"),
+        "blocks": {f"b{i}": _block_schema(D, cfg.n_heads, D)
+                   for i in range(cfg.n_blocks)},
+        "ln_f_s": ParamDef((D,), ("embed",), "ones"),
+        "ln_f_b": ParamDef((D,), ("embed",), "zeros"),
+    }
+
+
+def sasrec_hidden(params: Schema, cfg: RecsysConfig, hist: jax.Array) -> jax.Array:
+    x = jnp.take(params["item_emb"], hist, axis=0, mode="clip") + params["pos_emb"][None]
+    for i in range(cfg.n_blocks):
+        x = _block_apply(params["blocks"][f"b{i}"], x, causal=True)
+    return L.layernorm(x, params["ln_f_s"], params["ln_f_b"])
+
+
+def sasrec_forward(params: Schema, cfg: RecsysConfig, inputs: Dict) -> jax.Array:
+    """Pointwise score of `target` given history (serving)."""
+    h = sasrec_hidden(params, cfg, inputs["hist"])[:, -1]  # (B, D)
+    t = jnp.take(params["item_emb"], inputs["target"], axis=0, mode="clip")
+    return jnp.sum(h * t, axis=-1)
+
+
+def sasrec_loss(params: Schema, cfg: RecsysConfig, batch: Dict) -> jax.Array:
+    """BCE over (pos, neg) next-item pairs at every position."""
+    h = sasrec_hidden(params, cfg, batch["hist"])  # (B,S,D)
+    pos = jnp.take(params["item_emb"], batch["pos"], axis=0, mode="clip")  # (B,S,D)
+    neg = jnp.take(params["item_emb"], batch["neg"], axis=0, mode="clip")
+    sp = jnp.sum(h * pos, -1)
+    sn = jnp.sum(h * neg, -1)
+    m = batch.get("mask")
+    m = jnp.ones_like(sp) if m is None else m
+    loss = -(jax.nn.log_sigmoid(sp) + jax.nn.log_sigmoid(-sn)) * m
+    return loss.sum() / jnp.maximum(m.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# DIEN (arXiv:1809.03672): GRU interest extraction + AUGRU evolution
+# ---------------------------------------------------------------------------
+
+
+def _gru_schema(d_in: int, d_h: int) -> Schema:
+    return {
+        "wz": ParamDef((d_in, d_h), ("embed", "hidden"), "fan_in"),
+        "uz": ParamDef((d_h, d_h), ("hidden", "hidden"), "fan_in"),
+        "bz": ParamDef((d_h,), ("hidden",), "zeros"),
+        "wr": ParamDef((d_in, d_h), ("embed", "hidden"), "fan_in"),
+        "ur": ParamDef((d_h, d_h), ("hidden", "hidden"), "fan_in"),
+        "br": ParamDef((d_h,), ("hidden",), "zeros"),
+        "wn": ParamDef((d_in, d_h), ("embed", "hidden"), "fan_in"),
+        "un": ParamDef((d_h, d_h), ("hidden", "hidden"), "fan_in"),
+        "bn": ParamDef((d_h,), ("hidden",), "zeros"),
+    }
+
+
+def _gru_cell(p: Schema, h: jax.Array, x: jax.Array,
+              update_scale: Optional[jax.Array] = None) -> jax.Array:
+    z = jax.nn.sigmoid(x @ p["wz"] + h @ p["uz"] + p["bz"])
+    r = jax.nn.sigmoid(x @ p["wr"] + h @ p["ur"] + p["br"])
+    n = jnp.tanh(x @ p["wn"] + (r * h) @ p["un"] + p["bn"])
+    if update_scale is not None:  # AUGRU: attention-scaled update gate
+        z = z * update_scale[:, None]
+    return (1.0 - z) * h + z * n
+
+
+def dien_schema(cfg: RecsysConfig) -> Schema:
+    D, H = cfg.embed_dim, cfg.gru_dim
+    cate_vocab = max(cfg.item_vocab // 100, 16)
+    d_in = 2 * D  # item + category embedding
+    return {
+        "item_emb": ParamDef((cfg.item_vocab, D), ("table_rows", "embed"), "embed"),
+        "cate_emb": ParamDef((cate_vocab, D), ("table_rows", "embed"), "embed"),
+        "gru1": _gru_schema(d_in, H),
+        "gru2": _gru_schema(H, H),
+        "att_w": ParamDef((H, d_in), ("hidden", "embed"), "fan_in"),
+        "mlp": L.mlp_schema((H + d_in,) + cfg.mlp + (1,)),
+        "retrieval_proj": ParamDef((H, D), ("hidden", "embed"), "fan_in"),
+    }
+
+
+def dien_forward(params: Schema, cfg: RecsysConfig, inputs: Dict) -> jax.Array:
+    hi, hc = inputs["hist"], inputs["hist_cate"]  # (B,S)
+    ti, tc = inputs["target"], inputs["target_cate"]  # (B,)
+    x = jnp.concatenate([jnp.take(params["item_emb"], hi, axis=0, mode="clip"),
+                         jnp.take(params["cate_emb"], hc, axis=0, mode="clip")], axis=-1)  # (B,S,2D)
+    tgt = jnp.concatenate([jnp.take(params["item_emb"], ti, axis=0, mode="clip"),
+                           jnp.take(params["cate_emb"], tc, axis=0, mode="clip")], axis=-1)  # (B,2D)
+    B, S, _ = x.shape
+    H = cfg.gru_dim
+
+    def step1(h, xt):
+        h = _gru_cell(params["gru1"], h, xt)
+        return h, h
+    _, interests = lax.scan(step1, jnp.zeros((B, H), x.dtype), x.swapaxes(0, 1))
+    interests = interests.swapaxes(0, 1)  # (B,S,H)
+
+    att = jnp.einsum("bsh,hd,bd->bs", interests, params["att_w"], tgt)
+    att = jax.nn.softmax(att, axis=-1)  # (B,S)
+
+    def step2(h, xs):
+        it, at = xs
+        h = _gru_cell(params["gru2"], h, it, update_scale=at)
+        return h, None
+    h_final, _ = lax.scan(step2, jnp.zeros((B, H), x.dtype),
+                          (interests.swapaxes(0, 1), att.swapaxes(0, 1)))
+    mlp_in = jnp.concatenate([h_final, tgt], axis=-1)
+    logit = L.mlp_apply(params["mlp"], mlp_in, act=jax.nn.relu)
+    return logit[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Unified dispatch
+# ---------------------------------------------------------------------------
+
+
+def recsys_schema(cfg: RecsysConfig) -> Schema:
+    return {"dlrm": dlrm_schema, "bst": bst_schema, "sasrec": sasrec_schema,
+            "dien": dien_schema}[cfg.kind](cfg)
+
+
+def recsys_init(key, cfg: RecsysConfig):
+    return L.init_params(key, recsys_schema(cfg), dtype=jnp.dtype(cfg.dtype))
+
+
+def recsys_specs(cfg: RecsysConfig):
+    return L.param_specs(recsys_schema(cfg))
+
+
+def recsys_forward(params, cfg: RecsysConfig, inputs: Dict) -> jax.Array:
+    return {"dlrm": dlrm_forward, "bst": bst_forward, "sasrec": sasrec_forward,
+            "dien": dien_forward}[cfg.kind](params, cfg, inputs)
+
+
+def recsys_loss(params, cfg: RecsysConfig, batch: Dict) -> Tuple[jax.Array, Dict]:
+    if cfg.kind == "sasrec":
+        return sasrec_loss(params, cfg, batch), {}
+    logit = recsys_forward(params, cfg, batch)
+    y = batch["label"].astype(jnp.float32)
+    loss = jnp.mean(-(y * jax.nn.log_sigmoid(logit)
+                      + (1 - y) * jax.nn.log_sigmoid(-logit)))
+    return loss, {}
+
+
+def user_vector(params, cfg: RecsysConfig, inputs: Dict) -> jax.Array:
+    """Two-tower user representation in item-embedding space."""
+    if cfg.kind == "dlrm":
+        return L.mlp_apply(params["bot"], inputs["dense"], act=jax.nn.relu,
+                           final_act=True)
+    if cfg.kind == "bst":
+        x = jnp.take(params["item_emb"], inputs["hist"], axis=0, mode="clip")
+        x = x + params["pos_emb"][None, :x.shape[1]]
+        for i in range(cfg.n_blocks):
+            x = _block_apply(params["blocks"][f"b{i}"], x, causal=False)
+        return x.mean(axis=1)
+    if cfg.kind == "sasrec":
+        return sasrec_hidden(params, cfg, inputs["hist"])[:, -1]
+    if cfg.kind == "dien":
+        x = jnp.concatenate([jnp.take(params["item_emb"], inputs["hist"], axis=0, mode="clip"),
+                             jnp.take(params["cate_emb"], inputs["hist_cate"], axis=0, mode="clip")],
+                            axis=-1)
+        B, S, _ = x.shape
+        def step(h, xt):
+            h = _gru_cell(params["gru1"], h, xt)
+            return h, None
+        h, _ = lax.scan(step, jnp.zeros((B, cfg.gru_dim), x.dtype), x.swapaxes(0, 1))
+        return h @ params["retrieval_proj"]
+    raise ValueError(cfg.kind)
+
+
+def candidate_matrix(params, cfg: RecsysConfig, n_candidates: int) -> jax.Array:
+    table = params["tables"]["t00"] if cfg.kind == "dlrm" else params["item_emb"]
+    return table[:n_candidates]
+
+
+def retrieval_scores(params, cfg: RecsysConfig, inputs: Dict,
+                     n_candidates: int) -> jax.Array:
+    """(B, n_candidates) similarity of each query vs the candidate corpus.
+
+    Candidates come from ``inputs["cand_bank"]`` (a (C, D) embedding bank —
+    the production layout: retrieval never scans raw sharded tables) or, at
+    test scale, a slice of the item table."""
+    u = user_vector(params, cfg, inputs)  # (B, D)
+    c = inputs.get("cand_bank")
+    if c is None:
+        c = candidate_matrix(params, cfg, n_candidates)
+    c = shard_activation(c, ("cands", "act_embed"))
+    s = jnp.einsum("bd,cd->bc", u, c)
+    return shard_activation(s, ("batch", "cands"))

@@ -1,0 +1,442 @@
+"""Transformer stack (decoder LM / bidirectional encoder) with Recall exits.
+
+Layers are *stacked* (leading ``n_layers`` dim) and executed with
+``lax.scan`` so 95-layer models compile to one while-loop body (small HLO,
+fast SPMD partitioning). Static layer ranges (``layer_start:layer_end``)
+slice the stacked params — this is how coarse-grained (early-exited)
+encoding and "live encoder" refinement (paper §3.4) reuse one weight set.
+
+LoRA deltas (paper §3.3 P-LoRA) ride through the same scan as an optional
+stacked pytree; ``lora={}`` disables them with zero cost.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import LMConfig, RecallConfig
+from repro.distributed.mesh_utils import shard_activation
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models.layers import ParamDef, Schema
+
+
+# ---------------------------------------------------------------------------
+# Schema
+# ---------------------------------------------------------------------------
+
+
+def lm_schema(cfg: LMConfig, recall: RecallConfig, *, embed_out: int = 1024,
+              with_lm_head: bool = True) -> Schema:
+    Ld = (cfg.n_layers,)
+    layer: Schema = {
+        "norm1": L.rmsnorm_schema(cfg.d_model, Ld),
+        "norm2": L.rmsnorm_schema(cfg.d_model, Ld),
+        "attn": L.attn_schema(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                              cfg.head_dim, cfg.qkv_bias, layer_dims=Ld),
+    }
+    if cfg.moe is not None:
+        layer["moe"] = MOE.moe_schema(cfg.d_model, cfg.moe, layer_dims=Ld)
+    else:
+        layer["mlp"] = L.swiglu_schema(cfg.d_model, cfg.d_ff, layer_dims=Ld)
+    s: Schema = {
+        "embed": L.embed_schema(cfg.vocab, cfg.d_model),
+        "layers": layer,
+        "final_norm": L.rmsnorm_schema(cfg.d_model),
+        # Recall exit head: shared across exits, left untuned during healing.
+        "exit_head": {
+            "norm": L.rmsnorm_schema(cfg.d_model),
+            "proj": ParamDef((cfg.d_model, embed_out), ("embed", "act_embed"), "fan_in"),
+        },
+    }
+    if with_lm_head and not cfg.tie_embeddings:
+        s["lm_head"] = ParamDef((cfg.d_model, cfg.vocab), ("embed", "vocab"), "fan_in")
+    return s
+
+
+def lm_init(key: jax.Array, cfg: LMConfig, recall: RecallConfig, **kw):
+    dtype = jnp.dtype(cfg.dtype)
+    return L.init_params(key, lm_schema(cfg, recall, **kw), dtype=dtype)
+
+
+def lm_specs(cfg: LMConfig, recall: RecallConfig, **kw):
+    return L.param_specs(lm_schema(cfg, recall, **kw))
+
+
+def lm_abstract(cfg: LMConfig, recall: RecallConfig, **kw):
+    return L.abstract_params(lm_schema(cfg, recall, **kw), dtype=jnp.dtype(cfg.dtype))
+
+
+# ---------------------------------------------------------------------------
+# LoRA-aware projections
+# ---------------------------------------------------------------------------
+
+
+def _lora_delta(x: jax.Array, lora_t: Dict[str, jax.Array], scale: float) -> jax.Array:
+    """x (B,S,d) -> (B,S,*out) low-rank delta."""
+    h = jnp.einsum("bsd,dr->bsr", x, lora_t["a"].astype(x.dtype))
+    if lora_t["b"].ndim == 3:  # (r, H, hd)
+        return scale * jnp.einsum("bsr,rhk->bshk", h, lora_t["b"].astype(x.dtype))
+    return scale * jnp.einsum("bsr,rf->bsf", h, lora_t["b"].astype(x.dtype))
+
+
+def _proj_qkv(p: Schema, x: jax.Array, lora: Dict, lora_scale: float,
+              positions: jax.Array, rope_theta: float):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if "wq" in lora:
+        q = q + _lora_delta(x, lora["wq"], lora_scale)
+    if "wk" in lora:
+        k = k + _lora_delta(x, lora["wk"], lora_scale)
+    if "wv" in lora:
+        v = v + _lora_delta(x, lora["wv"], lora_scale)
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if rope_theta > 0:
+        q = L.apply_rope(q, positions, rope_theta)
+        k = L.apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def _attn_out(p: Schema, o: jax.Array, x_in: jax.Array, lora: Dict,
+              lora_scale: float) -> jax.Array:
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(o.dtype))
+    if "wo" in lora:
+        B, S, H, K = o.shape
+        h = jnp.einsum("bshk,hkr->bsr", o, lora["wo"]["a"].astype(o.dtype))
+        y = y + lora_scale * jnp.einsum("bsr,rd->bsd", h, lora["wo"]["b"].astype(o.dtype))
+    return y
+
+
+def _swiglu(p: Schema, x: jax.Array, lora: Dict, lora_scale: float) -> jax.Array:
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype))
+    if "w_gate" in lora:
+        g = g + _lora_delta(x, lora["w_gate"], lora_scale)
+    if "w_up" in lora:
+        u = u + _lora_delta(x, lora["w_up"], lora_scale)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    h = shard_activation(h, ("batch", "seq", "mlp"))
+    y = jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(x.dtype))
+    if "w_down" in lora:
+        y = y + _lora_delta(h, lora["w_down"], lora_scale)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Layer bodies
+# ---------------------------------------------------------------------------
+
+
+def layer_full(pl_: Schema, x: jax.Array, cfg: LMConfig, positions: jax.Array,
+               *, lora: Dict, lora_scale: float, attn_impl: str,
+               block_q: int, block_kv: int, block_skip: bool,
+               window: int, return_kv: bool = False,
+               attn_unroll: bool = False):
+    """Self-attention layer over the full (own) sequence."""
+    h = L.rmsnorm(x, pl_["norm1"], cfg.norm_eps)
+    q, k, v = _proj_qkv(pl_["attn"], h, lora, lora_scale, positions, cfg.rope_theta)
+    # Attention-entry resharding (Megatron-SP style): full attention needs the
+    # whole sequence, so inside attention the parallel dims are batch + heads
+    # ("attn_seq" has no rule => seq is gathered here, re-scattered after wo).
+    # Without this the partitioner replicates the grouped q (catastrophic for
+    # seq-sharded activations on long sequences).
+    # "attn_batch" defaults to the batch rule; overriding it to
+    # ("data","model") batch-parallelizes attention across the whole mesh —
+    # the fix for archs whose head count doesn't divide the model axis.
+    q = shard_activation(q, ("attn_batch", "attn_seq", "heads", "head_dim"))
+    k = shard_activation(k, ("attn_batch", "attn_seq", "kv_heads", "head_dim"))
+    v = shard_activation(v, ("attn_batch", "attn_seq", "kv_heads", "head_dim"))
+    o = flash_attention(q, k, v, causal=cfg.causal, window=window,
+                        block_q=block_q, block_kv=block_kv,
+                        block_skip=block_skip, unroll=attn_unroll,
+                        impl=attn_impl)
+    x = x + _attn_out(pl_["attn"], o, h, lora, lora_scale)
+    h2 = L.rmsnorm(x, pl_["norm2"], cfg.norm_eps)
+    if cfg.moe is not None:
+        y, aux = MOE.moe_apply(pl_["moe"], h2, cfg.moe)
+    else:
+        y, aux = _swiglu(pl_["mlp"], h2, lora, lora_scale), jnp.float32(0.0)
+    x = x + y
+    x = shard_activation(x, ("batch", "seq", "act_embed"))
+    kv = (k, v) if return_kv else None
+    return x, kv, aux
+
+
+def layer_decode(pl_: Schema, x: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                 lengths: jax.Array, cfg: LMConfig, *, lora: Dict,
+                 lora_scale: float, window: int, attn_impl: str):
+    """One-token step. x (B,1,d); k/v_cache (B,S,KV,hd); lengths (B,) is the
+    sequence length *including* the new token (query sits at lengths-1)."""
+    B = x.shape[0]
+    h = L.rmsnorm(x, pl_["norm1"], cfg.norm_eps)
+    positions = (lengths - 1)[:, None]  # (B,1)
+    q, k_new, v_new = _proj_qkv(pl_["attn"], h, lora, lora_scale, positions,
+                                cfg.rope_theta)
+    # insert new kv at position lengths-1 (per-sequence)
+    upd = jax.vmap(lambda c, n, p: lax.dynamic_update_slice_in_dim(c, n, p, axis=0))
+    k_cache = upd(k_cache, k_new, lengths - 1)
+    v_cache = upd(v_cache, v_new, lengths - 1)
+    k_cache = shard_activation(k_cache, ("kv_batch", "kv_seq", "kv_heads", "head_dim"))
+    v_cache = shard_activation(v_cache, ("kv_batch", "kv_seq", "kv_heads", "head_dim"))
+    o = decode_attention(q[:, 0], k_cache, v_cache, lengths, window=window,
+                         impl="xla" if attn_impl != "pallas" else "xla")
+    x = x + _attn_out(pl_["attn"], o[:, None], h, lora, lora_scale)
+    h2 = L.rmsnorm(x, pl_["norm2"], cfg.norm_eps)
+    if cfg.moe is not None:
+        y, aux = MOE.moe_apply(pl_["moe"], h2, cfg.moe)
+    else:
+        y, aux = _swiglu(pl_["mlp"], h2, lora, lora_scale), jnp.float32(0.0)
+    return x + y, k_cache, v_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Stack forward (scan over stacked layers)
+# ---------------------------------------------------------------------------
+
+
+def slice_layers(tree, start: int, end: int):
+    """Static slice of the stacked-layer leading dim."""
+    return jax.tree.map(lambda a: a[start:end], tree)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _embed_lookup_sharded(table: jax.Array, ids: jax.Array, vocab: int):
+    return L.embed_lookup(table, ids)
+
+
+def _embed_fwd(table, ids, vocab):
+    return L.embed_lookup(table, ids), (ids, jnp.zeros((), table.dtype))
+
+
+def _embed_bwd(vocab, res, g):
+    """dTable via a vocab-sharded one-hot einsum: the per-device partial is
+    (V/tp, D) instead of a full (V, D) f32 buffer (which at deepseek scale is
+    a 3.1 GiB transient per live value)."""
+    ids, dt_token = res
+    onehot = jax.nn.one_hot(ids, vocab, dtype=g.dtype)
+    onehot = shard_activation(onehot, ("batch", "xent_seq", "vocab"))
+    g = shard_activation(g, ("batch", "xent_seq", "act_embed"))
+    dtable = jnp.einsum("bsv,bsd->vd", onehot, g.astype(jnp.float32))
+    dtable = shard_activation(dtable, ("vocab", "embed"))
+    return dtable.astype(dt_token.dtype), None
+
+
+_embed_lookup_sharded.defvjp(_embed_fwd, _embed_bwd)
+
+
+def forward_hidden(params: Schema, cfg: LMConfig, recall: RecallConfig, *,
+                   tokens: Optional[jax.Array] = None,
+                   embeds: Optional[jax.Array] = None,
+                   mask: Optional[jax.Array] = None,
+                   lora: Optional[Dict] = None,
+                   layer_start: int = 0, layer_end: Optional[int] = None,
+                   collect_pooled: bool = False,
+                   pool: str = "mean",
+                   return_kv: bool = False,
+                   remat: bool = False,
+                   attn_impl: str = "xla",
+                   block_q: int = 256, block_kv: int = 256,
+                   block_skip: bool = False, unroll: bool = False,
+                   attn_unroll: bool = False,
+                   window: Optional[int] = None):
+    """Run layers [layer_start, layer_end). Returns dict with:
+    h: (B,S,d) final hidden; pooled: (L,B,d) per-layer masked-mean hidden
+    (if collect_pooled); kv: (L,B,S,KV,hd) pair (if return_kv); aux: scalar.
+    """
+    if embeds is None:
+        embeds = _embed_lookup_sharded(params["embed"], tokens,
+                                       cfg.vocab).astype(jnp.dtype(cfg.dtype))
+    x = shard_activation(embeds, ("batch", "seq", "act_embed"))
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    layer_end = cfg.n_layers if layer_end is None else layer_end
+    window = cfg.window if window is None else window
+    lp = slice_layers(params["layers"], layer_start, layer_end)
+    lora_sl = slice_layers(lora, layer_start, layer_end) if lora else {}
+    lora_scale = recall.lora_alpha / recall.lora_rank
+
+    def body(carry, xs):
+        x, aux = carry
+        pl_, lora_l = xs
+        x, kv, aux_l = layer_full(
+            pl_, x, cfg, positions, lora=lora_l, lora_scale=lora_scale,
+            attn_impl=attn_impl, block_q=block_q, block_kv=block_kv,
+            block_skip=block_skip, window=window, return_kv=return_kv,
+            attn_unroll=attn_unroll)
+        ys = {}
+        if collect_pooled:
+            if pool == "cls":
+                pooled = x[:, 0].astype(jnp.float32)
+            elif mask is not None:
+                m = mask[..., None].astype(jnp.float32)
+                pooled = (x.astype(jnp.float32) * m).sum(1) / jnp.maximum(m.sum(1), 1.0)
+            else:
+                pooled = x.astype(jnp.float32).mean(1)
+            ys["pooled"] = pooled.astype(x.dtype)
+        if return_kv:
+            ys["kv"] = kv
+        return (x, aux + aux_l), ys
+
+    if remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    (x, aux), ys = lax.scan(body, (x, jnp.float32(0.0)), (lp, lora_sl),
+                            unroll=unroll)
+    out = {"h": x, "aux": aux}
+    if collect_pooled:
+        out["pooled"] = ys["pooled"]
+    if return_kv:
+        out["kv"] = ys["kv"]
+    return out
+
+
+def exit_embedding(params: Schema, pooled: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """pooled (..., d) -> L2-normalized embedding (..., E) via shared exit head."""
+    h = L.rmsnorm(pooled, params["exit_head"]["norm"], eps)
+    e = h.astype(jnp.float32) @ params["exit_head"]["proj"].astype(jnp.float32)
+    return L.l2_normalize(e)
+
+
+def encode_exits(params: Schema, cfg: LMConfig, recall: RecallConfig,
+                 tokens=None, embeds=None, mask=None, lora=None,
+                 **fw_kw) -> Dict[str, jax.Array]:
+    """Embed at every exit granularity: returns {exit_embs: (n_exits,B,E), ...}."""
+    out = forward_hidden(params, cfg, recall, tokens=tokens, embeds=embeds,
+                         mask=mask, lora=lora, collect_pooled=True, **fw_kw)
+    exits = recall.exit_layers(cfg.n_layers)
+    idx = jnp.array([e - 1 for e in exits])
+    pooled_at_exits = out["pooled"][idx]  # (n_exits, B, d)
+    embs = exit_embedding(params, pooled_at_exits, cfg.norm_eps)
+    return {"exit_embs": embs, "exits": exits, "pooled": out["pooled"],
+            "h": out["h"], "aux": out["aux"]}
+
+
+def encode_at(params: Schema, cfg: LMConfig, recall: RecallConfig, e: int,
+              tokens=None, embeds=None, mask=None, lora=None, **fw_kw):
+    """Coarse-grained embedding at static exit depth e (runs only e layers)."""
+    out = forward_hidden(params, cfg, recall, tokens=tokens, embeds=embeds,
+                         mask=mask, lora=lora, layer_end=e, collect_pooled=True,
+                         **fw_kw)
+    emb = exit_embedding(params, out["pooled"][-1], cfg.norm_eps)
+    return {"emb": emb, "h": out["h"], "pooled_last": out["pooled"][-1]}
+
+
+def refine_from(params: Schema, cfg: LMConfig, recall: RecallConfig,
+                h_cached: jax.Array, start: int, mask=None, lora=None, **fw_kw):
+    """Live-encoder refinement (§3.4): continue from cached layer-`start`
+    activations to the full-depth fine-grained embedding."""
+    out = forward_hidden(params, cfg, recall, embeds=h_cached, mask=mask,
+                         lora=lora, layer_start=start, collect_pooled=True, **fw_kw)
+    emb = exit_embedding(params, out["pooled"][-1], cfg.norm_eps)
+    return {"emb": emb, "h": out["h"]}
+
+
+# ---------------------------------------------------------------------------
+# LM loss (chunked, vocab-sharded) and serving steps
+# ---------------------------------------------------------------------------
+
+
+def _lm_head(params: Schema, cfg: LMConfig):
+    if cfg.tie_embeddings or "lm_head" not in params:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def chunked_xent(h: jax.Array, head: jax.Array, labels: jax.Array,
+                 mask: Optional[jax.Array] = None, chunk: int = 1024,
+                 unroll: bool = False):
+    """Cross-entropy without materializing full (B,S,V) logits."""
+    B, S, D = h.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    n = S // chunk
+    hc = h.reshape(B, n, chunk, D).swapaxes(0, 1)  # (n,B,c,D)
+    lc = labels.reshape(B, n, chunk).swapaxes(0, 1)
+    mc = (mask.reshape(B, n, chunk).swapaxes(0, 1) if mask is not None
+          else jnp.ones((n, B, chunk), jnp.float32))
+
+    def step(carry, xs):
+        tot, cnt = carry
+        hi, li, mi = xs
+        logits = jnp.einsum("bcd,dv->bcv", hi, head.astype(hi.dtype))
+        # "xent_seq" is unmapped: the vocab axis takes the model dim so the
+        # lm_head gradient is born vocab-sharded (no full (D,V) f32 partial).
+        logits = shard_activation(logits, ("batch", "xent_seq", "vocab"))
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(li, logits.shape[-1], dtype=logits.dtype)
+        ll = jnp.sum(logits * onehot, axis=-1)
+        nll = (lse - ll) * mi
+        return (tot + nll.sum(), cnt + mi.sum()), None
+
+    (tot, cnt), _ = lax.scan(step, (jnp.float32(0.0), jnp.float32(0.0)),
+                             (hc, lc, mc), unroll=unroll)
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def lm_loss(params: Schema, cfg: LMConfig, recall: RecallConfig,
+            tokens: jax.Array, labels: jax.Array,
+            mask: Optional[jax.Array] = None, *, chunk: int = 1024,
+            lora=None, **fw_kw) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    out = forward_hidden(params, cfg, recall, tokens=tokens, mask=mask,
+                         lora=lora, **fw_kw)
+    h = L.rmsnorm(out["h"], params["final_norm"], cfg.norm_eps)
+    loss = chunked_xent(h, _lm_head(params, cfg), labels, mask, chunk=chunk,
+                        unroll=fw_kw.get("unroll", False))
+    return loss + out["aux"], {"xent": loss, "aux": out["aux"]}
+
+
+def prefill(params: Schema, cfg: LMConfig, recall: RecallConfig,
+            tokens: jax.Array, pad_to: Optional[int] = None, **fw_kw):
+    """Prefill: returns KV cache (L,B,S,KV,hd), final hidden, exit embeddings."""
+    out = forward_hidden(params, cfg, recall, tokens=tokens, return_kv=True,
+                         collect_pooled=True, **fw_kw)
+    k, v = out["kv"]  # (L,B,S,KV,hd)
+    if pad_to is not None and pad_to > k.shape[2]:
+        padw = ((0, 0), (0, 0), (0, pad_to - k.shape[2]), (0, 0), (0, 0))
+        k, v = jnp.pad(k, padw), jnp.pad(v, padw)
+    exits = recall.exit_layers(cfg.n_layers)
+    idx = jnp.array([e - 1 for e in exits])
+    embs = exit_embedding(params, out["pooled"][idx], cfg.norm_eps)
+    return {"k_cache": k, "v_cache": v, "h": out["h"], "exit_embs": embs,
+            "aux": out["aux"]}
+
+
+def decode_step(params: Schema, cfg: LMConfig, recall: RecallConfig,
+                token: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                lengths: jax.Array, *, lora=None, window: Optional[int] = None,
+                attn_impl: str = "xla", unroll: bool = False):
+    """token (B,); caches (L,B,S,KV,hd); lengths (B,) incl. the new token.
+    Returns (logits (B,V), new caches)."""
+    x = L.embed_lookup(params["embed"], token[:, None]).astype(jnp.dtype(cfg.dtype))
+    x = shard_activation(x, ("batch", "seq", "act_embed"))
+    window = cfg.window if window is None else window
+    lora = lora or {}
+    lora_scale = RecallConfig().lora_alpha / RecallConfig().lora_rank
+
+    def body(carry, xs):
+        x, aux = carry
+        pl_, kc, vc, lora_l = xs
+        x, kc, vc, aux_l = layer_decode(pl_, x, kc, vc, lengths, cfg,
+                                        lora=lora_l, lora_scale=lora_scale,
+                                        window=window, attn_impl=attn_impl)
+        return (x, aux + aux_l), (kc, vc)
+
+    (x, aux), (k_new, v_new) = lax.scan(
+        body, (x, jnp.float32(0.0)),
+        (params["layers"], k_cache, v_cache, lora if lora else
+         jax.tree.map(lambda _: None, {})), unroll=unroll)
+    h = L.rmsnorm(x[:, 0], params["final_norm"], cfg.norm_eps)
+    logits = h.astype(jnp.float32) @ _lm_head(params, cfg).astype(jnp.float32)
+    logits = shard_activation(logits, ("batch", "vocab"))
+    return logits, k_new, v_new

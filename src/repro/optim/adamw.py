@@ -1,0 +1,96 @@
+"""AdamW with decoupled weight decay, global-norm clipping, grad accumulation.
+
+Pure-pytree implementation (no optax in this environment). State layout keeps
+``m``/``v`` in float32 regardless of param dtype (mixed-precision training).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array  # scalar int32
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jax.Array], jax.Array] | float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          m=jax.tree.map(zeros, params),
+                          v=jax.tree.map(zeros, params))
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.float32(self.lr)
+
+    def update(self, grads, state: AdamWState, params,
+               grad_mask=None) -> Tuple[Any, AdamWState, dict]:
+        """Returns (new_params, new_state, metrics). ``grad_mask`` (same
+        structure, 0/1) freezes masked leaves (used by P-LoRA healing)."""
+        if grad_mask is not None:
+            grads = jax.tree.map(lambda g, k: g * k, grads, grad_mask)
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9)) \
+            if self.clip_norm > 0 else jnp.float32(1.0)
+        step = state.step + 1
+        b1c = 1.0 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** step.astype(jnp.float32)
+        lr = self._lr(step)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m = self.b1 * m + (1 - self.b1) * g
+            v = self.b2 * v + (1 - self.b2) * jnp.square(g)
+            mh, vh = m / b1c, v / b2c
+            delta = mh / (jnp.sqrt(vh) + self.eps) + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, params, grads, state.m, state.v)
+        new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, AdamWState(step, new_m, new_v), {
+            "grad_norm": gnorm, "lr": lr}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    if not leaves:
+        return jnp.float32(0.0)
+    return jnp.sqrt(sum(leaves))
+
+
+def accumulate_grads(loss_fn, params, batches, *, microbatches: int):
+    """Gradient accumulation over ``microbatches`` equal slices of ``batches``
+    (leading batch axis). Returns (mean_loss, mean_grads)."""
+
+    def slice_mb(i):
+        def f(x):
+            mb = x.shape[0] // microbatches
+            return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+        return jax.tree.map(f, batches)
+
+    def body(carry, i):
+        loss_acc, grads_acc = carry
+        loss, grads = jax.value_and_grad(loss_fn)(params, slice_mb(i))
+        return (loss_acc + loss,
+                jax.tree.map(jnp.add, grads_acc, grads)), None
+
+    zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (loss, grads), _ = jax.lax.scan(body, (jnp.float32(0.0), zero_g),
+                                    jnp.arange(microbatches))
+    inv = 1.0 / microbatches
+    return loss * inv, jax.tree.map(lambda g: g * inv, grads)

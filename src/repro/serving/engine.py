@@ -1,0 +1,205 @@
+"""Embedding runtime (paper §2.2 "offline remembering", Figure 6 left half).
+
+Pipeline per drained queue batch:
+  1. superficial pass — first N layers, one dense batch (cached per sample)
+  2. pre-exit prediction — tiny MLP on the pooled superficial state
+  3. exit-group batching — samples grouped by predicted exit; each group runs
+     layers [N, e) as one dense, statically-shaped executable (compilation
+     cached per (exit, batch-bucket))
+  4. store — coarse embedding + INT4-quantized superficial activations into
+     the EmbeddingStore (refinement fuel for §3.4)
+
+Policies: "recall" (the above), "branchynet" (run layer-by-layer, exit on
+confidence — no pre-exit, no batching), "fixed" (everyone exits at layer k),
+"full" (no early exit). All share the same model fns so accuracy
+comparisons are apples-to-apples; device-time comparisons for edge hardware
+come from repro.core.scheduler's calibrated cost model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import MEMConfig, RecallConfig
+from repro.core import preexit as PE
+from repro.core.scheduler import plan_exit_groups
+from repro.core.store import EmbeddingStore
+from repro.models import imagebind as IB
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass
+class EngineStats:
+    n_embedded: int = 0
+    layers_executed: float = 0.0
+    superficial_batches: int = 0
+    group_batches: int = 0
+    wall_s: float = 0.0
+
+    @property
+    def avg_layers(self) -> float:
+        return self.layers_executed / max(self.n_embedded, 1)
+
+
+class EmbeddingEngine:
+    def __init__(self, params, cfg: MEMConfig, recall: RecallConfig, *,
+                 modality: str = "vision", lora=None,
+                 predictor_params=None, policy: str = "recall",
+                 fixed_exit: Optional[int] = None, max_batch: int = 64,
+                 store: Optional[EmbeddingStore] = None,
+                 cache_activations: bool = True, fw_kw: Optional[dict] = None):
+        self.params, self.cfg, self.recall = params, cfg, recall
+        self.modality = modality
+        self.lora = lora
+        self.predictor = predictor_params
+        self.policy = policy
+        self.fixed_exit = fixed_exit
+        self.max_batch = max_batch
+        self.store = store if store is not None else EmbeddingStore(cfg.embed_dim)
+        self.cache_activations = cache_activations
+        self.fw_kw = fw_kw or {}
+        self.tower = cfg.tower(modality)
+        self.exits = recall.exit_layers(self.tower.n_layers)
+        self.stats = EngineStats()
+        self._queue: List[Tuple[int, np.ndarray]] = []
+
+        self._jit_superficial = jax.jit(self._superficial)
+        self._jit_continue = {}  # (start, end) -> jitted fn
+
+    # -- model fns -------------------------------------------------------------
+
+    def _superficial(self, x):
+        """First-N-layer pass; returns hidden state + per-layer pooled states
+        (exits at depth <= N read their embedding straight from these)."""
+        N = self.recall.superficial_layers
+        out = IB.tower_forward(self.params, self.cfg, self.recall, self.modality,
+                               x, layer_end=N, lora=self.lora, **self.fw_kw)
+        return out["h"], out["pooled"]  # (B,S,d), (N,B,d)
+
+    def _continue_fn(self, start: int, end: int):
+        key = (start, end)
+        if key not in self._jit_continue:
+            def fn(h):
+                out = IB.tower_forward(self.params, self.cfg, self.recall,
+                                       self.modality, inputs=None, h_state=h,
+                                       layer_start=start, layer_end=end,
+                                       lora=self.lora, **self.fw_kw)
+                tp = self.params["towers"][self.modality]
+                emb = T.exit_embedding(tp, out["pooled"][-1], self.cfg.norm_eps)
+                return emb
+            self._jit_continue[key] = jax.jit(fn)
+        return self._jit_continue[key]
+
+    # -- queue -------------------------------------------------------------------
+
+    def submit(self, uid: int, item: np.ndarray) -> None:
+        self._queue.append((uid, item))
+
+    def submit_batch(self, uids: Sequence[int], items: np.ndarray) -> None:
+        for u, it in zip(uids, items):
+            self._queue.append((int(u), it))
+
+    # -- execution ---------------------------------------------------------------
+
+    def drain(self) -> EngineStats:
+        """Embed everything queued; returns cumulative stats."""
+        if not self._queue:
+            return self.stats
+        t0 = time.perf_counter()
+        uids = np.array([u for u, _ in self._queue])
+        items = np.stack([x for _, x in self._queue])
+        self._queue.clear()
+        N = self.recall.superficial_layers
+
+        if self.policy == "full":
+            pred_idx = np.full(len(uids), len(self.exits) - 1)
+        elif self.policy == "fixed":
+            fe = self.fixed_exit if self.fixed_exit is not None else self.exits[0]
+            pred_idx = np.full(len(uids), self.exits.index(fe))
+        elif self.policy in ("recall", "branchynet"):
+            pred_idx = None  # decided below
+        else:
+            raise ValueError(self.policy)
+
+        # 1) superficial pass (batched) — shared by every policy that needs
+        # hidden states; branchynet also starts from layer 0 per sample.
+        h_sup_parts, pooled_parts = [], []
+        for i in range(0, len(items), self.max_batch):
+            h, pooled = self._jit_superficial(jnp.asarray(items[i:i + self.max_batch]))
+            h_sup_parts.append(np.asarray(h))
+            pooled_parts.append(np.asarray(pooled))
+            self.stats.superficial_batches += 1
+        h_sup = np.concatenate(h_sup_parts)
+        pooled_all = np.concatenate(pooled_parts, axis=1)  # (N, B, d)
+
+        if self.policy == "recall":
+            assert self.predictor is not None, "recall policy needs a predictor"
+            pred_idx = np.asarray(PE.predict_exit(
+                self.predictor, jnp.asarray(pooled_all[-1]),
+                n_exits=len(self.exits)))
+        elif self.policy == "branchynet":
+            # confidence-style: run each sample layer-by-layer (batch=1) and
+            # exit when consecutive exit embeddings agree (cos > tau).
+            pred_idx = self._branchynet_exits(items)
+
+        # 2+3) exit groups -> dense batched continuation from layer N
+        tp = self.params["towers"][self.modality]
+        plan = plan_exit_groups(pred_idx, self.exits, N)
+        for exit_idx, exit_layer, ids in plan.batches(self.max_batch):
+            if exit_layer <= N:
+                # exit depth within the superficial prefix: embedding comes
+                # straight from the already-computed pooled state (free).
+                embs = np.asarray(T.exit_embedding(
+                    tp, jnp.asarray(pooled_all[exit_layer - 1][ids]),
+                    self.cfg.norm_eps))
+                layers_run = N  # superficial pass was still paid
+            else:
+                fn = self._continue_fn(N, exit_layer)
+                embs = np.asarray(fn(jnp.asarray(h_sup[ids])))
+                layers_run = exit_layer
+            self.stats.group_batches += 1
+            self.stats.layers_executed += float(len(ids) * layers_run)
+            cached = h_sup[ids] if self.cache_activations else None
+            self.store.add_batch(
+                uids[ids], embs, [exit_idx] * len(ids), [exit_layer] * len(ids),
+                modality=self.modality,
+                cached_hs=cached if cached is not None else None)
+        self.stats.n_embedded += len(uids)
+        self.stats.wall_s += time.perf_counter() - t0
+        return self.stats
+
+    def _branchynet_exits(self, items: np.ndarray, tau: float = 0.95) -> np.ndarray:
+        """Per-sample confidence exits (baseline; no batching by design)."""
+        fn = jax.jit(lambda x: IB.mem_embed_all_exits(
+            self.params, self.cfg, self.recall, self.modality, x,
+            lora=self.lora, **self.fw_kw)["exit_embs"])
+        out = np.zeros(len(items), np.int64)
+        for i in range(len(items)):
+            embs = np.asarray(fn(jnp.asarray(items[i:i + 1])))[:, 0]  # (n_exits, E)
+            exit_i = len(self.exits) - 1
+            for e in range(len(self.exits) - 1):
+                if float(embs[e] @ embs[e + 1]) > tau:
+                    exit_i = e
+                    break
+            out[i] = exit_i
+        return out
+
+    # -- refinement hook for the query runtime -----------------------------------
+
+    def refine_fn(self) -> Callable[[int], Optional[np.ndarray]]:
+        def refine(uid: int) -> Optional[np.ndarray]:
+            cached = self.store.cached_activation(uid)
+            if cached is None:
+                return None
+            h, _exit_layer = cached
+            # cached tensor is the superficial hidden state: resume there
+            start = self.recall.superficial_layers
+            fn = self._continue_fn(start, self.tower.n_layers)
+            emb = fn(jnp.asarray(h[None]))
+            return np.asarray(emb)[0]
+        return refine

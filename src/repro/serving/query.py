@@ -1,0 +1,68 @@
+"""Query runtime (paper §2.2 "online recall", §3.4 speculative retrieval).
+
+Embeds the query at several granularities (exit depths of the *query*
+tower), speculatively filters the store per granularity, verifies globally,
+then refines surviving coarse candidates with the live encoder under an
+optional latency budget. Repeated queries hit permanently-upgraded
+embeddings (§5.3) and skip refinement entirely.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import MEMConfig, RecallConfig
+from repro.core.retrieval import (RetrievalResult, single_granularity_retrieve,
+                                  speculative_retrieve)
+from repro.core.store import EmbeddingStore
+from repro.models import imagebind as IB
+
+
+class QueryEngine:
+    def __init__(self, params, cfg: MEMConfig, recall: RecallConfig, *,
+                 store: EmbeddingStore,
+                 refine_fn: Optional[Callable[[int], Optional[np.ndarray]]] = None,
+                 query_modality: str = "text", lora=None,
+                 fw_kw: Optional[dict] = None):
+        self.params, self.cfg, self.recall = params, cfg, recall
+        self.store = store
+        self.refine_fn = refine_fn
+        self.modality = query_modality
+        self.lora = lora
+        self.fw_kw = fw_kw or {}
+        t = cfg.tower(query_modality)
+        exits = recall.exit_layers(t.n_layers)
+        k = recall.query_granularities
+        # spread query granularities across the exit range (incl. full depth)
+        idx = np.unique(np.linspace(0, len(exits) - 1, k).round().astype(int))
+        self.granularities = [exits[i] for i in idx]
+        self._jit_all_exits = jax.jit(lambda x: IB.mem_embed_all_exits(
+            self.params, self.cfg, self.recall, self.modality, x,
+            lora=self.lora, **self.fw_kw)["exit_embs"])
+        self._exits = exits
+
+    def embed_query(self, query: np.ndarray) -> Dict[int, np.ndarray]:
+        """One tower pass gives every granularity (exit taps are free)."""
+        embs = np.asarray(self._jit_all_exits(jnp.asarray(query[None])))[:, 0]
+        return {e: embs[self._exits.index(e)] for e in self.granularities}
+
+    def query(self, query: np.ndarray, *, k: int = 10, final_k: int = 10,
+              refine_budget: Optional[int] = None,
+              speculative: bool = True) -> RetrievalResult:
+        by_g = self.embed_query(query)
+        fine = by_g[self.granularities[-1]]
+        if not speculative:
+            t0 = time.perf_counter()
+            uids, scores = single_granularity_retrieve(self.store, fine, k)
+            return RetrievalResult(uids=uids, scores=scores, filtered_uids=uids,
+                                   n_refined=0, latency_s=time.perf_counter() - t0,
+                                   per_round_s={})
+        return speculative_retrieve(
+            self.store, [by_g[g] for g in self.granularities], fine,
+            k=k, final_k=final_k, refine_fn=self.refine_fn,
+            refine_budget=refine_budget)

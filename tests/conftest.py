@@ -1,0 +1,15 @@
+"""Pytest config. NOTE: deliberately does NOT set
+--xla_force_host_platform_device_count — smoke tests and benches must see one
+device; multi-device tests spawn subprocesses with their own XLA_FLAGS."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

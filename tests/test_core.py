@@ -1,0 +1,211 @@
+"""Recall core: exits, pre-exit predictor, P-LoRA, store, speculative
+retrieval — incl. hypothesis property tests on the system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import LMConfig, RecallConfig
+from repro.core import exits as EX
+from repro.core import plora as PL
+from repro.core import preexit as PE
+from repro.core import retrieval as RT
+from repro.core.store import EmbeddingStore
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# exits
+# ---------------------------------------------------------------------------
+
+
+def test_optimal_exit_labels_constructed_case():
+    """Exit 0 embeddings are garbage, exit 1 are exact -> labels all 1."""
+    N, E = 16, 8
+    fine = jax.random.normal(KEY, (N, E))
+    fine = fine / jnp.linalg.norm(fine, axis=-1, keepdims=True)
+    garbage = jnp.roll(fine, 1, axis=0)  # retrieves the WRONG item
+    exit_embs = jnp.stack([garbage, fine, fine])
+    labels = EX.optimal_exit_labels(exit_embs, fine)
+    np.testing.assert_array_equal(np.asarray(labels), np.ones(N))
+
+
+def test_optimal_exit_labels_fallback_to_last():
+    N, E = 8, 4
+    fine = jax.random.normal(KEY, (N, E))
+    fine = fine / jnp.linalg.norm(fine, axis=-1, keepdims=True)
+    garbage = jnp.roll(fine, 1, axis=0)
+    exit_embs = jnp.stack([garbage, garbage])
+    labels = EX.optimal_exit_labels(exit_embs, fine)
+    np.testing.assert_array_equal(np.asarray(labels), np.full(N, 1))
+
+
+def test_retrieval_at_k():
+    corpus = jnp.eye(8)
+    q = jnp.eye(8)[:4] + 0.01
+    acc = EX.retrieval_at_k(q, corpus, jnp.arange(4), k=1)
+    assert float(acc) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# pre-exit predictor
+# ---------------------------------------------------------------------------
+
+
+def test_predictor_learns_separable_labels():
+    n, d, n_exits = 256, 16, 4
+    labels = jnp.asarray(np.random.default_rng(0).integers(0, n_exits, n))
+    centers = jax.random.normal(KEY, (n_exits, d)) * 3
+    feats = centers[labels] + 0.3 * jax.random.normal(KEY, (n, d))
+    params, stats = PE.train_predictor(KEY, feats, labels, n_exits=n_exits,
+                                       steps=150, hidden=32)
+    assert stats["acc"] > 0.9
+    assert stats["n_params"] < 250_000  # "~1MB" footprint claim
+
+
+def test_predictor_bias_shifts_later():
+    params = PE.predictor_init(KEY, 8, 16, 5)
+    feats = jax.random.normal(KEY, (10, 8))
+    base = PE.predict_exit(params, feats)
+    shifted = PE.predict_exit(params, feats, bias=2, n_exits=5)
+    assert bool(jnp.all(shifted >= base))
+    assert bool(jnp.all(shifted <= 4))
+
+
+# ---------------------------------------------------------------------------
+# P-LoRA
+# ---------------------------------------------------------------------------
+
+CFG = LMConfig(n_layers=6, d_model=32, n_heads=4, n_kv_heads=2, d_ff=64,
+               vocab=128, d_head=8, dtype="float32")
+
+
+def test_lora_b_zero_init():
+    rc = RecallConfig(lora_rank=4)
+    lora = PL.lora_init(KEY, CFG, rc)
+    for t, ab in lora.items():
+        assert float(jnp.sum(jnp.abs(ab["b"]))) == 0.0, t
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.lists(st.integers(0, 100), min_size=2, max_size=12),
+       st.integers(1, 3), st.integers(3, 6))
+def test_schedule_and_phases_tile_layers(hist, min_step, max_step):
+    """Property: P-LoRA phase windows tile [0, L) without gaps/overlaps and
+    steps stay within [min_step, max_step]."""
+    rc = RecallConfig(plora_min_step=min_step, plora_max_step=max_step)
+    n_exits = len(hist)
+    exits = tuple(range(1, n_exits + 1))
+    steps = PL.schedule_steps(np.asarray(hist), rc)
+    assert all(min_step <= s <= max_step for s in steps)
+    phases = PL.plora_phases(exits, steps)
+    assert phases[0][0] == 0
+    assert phases[-1][1] == exits[-1]
+    for (a, b), (c, d) in zip(phases, phases[1:]):
+        assert b == c and a < b
+
+
+def test_window_mask_freezes_outside():
+    rc = RecallConfig(lora_rank=2)
+    lora = PL.lora_init(KEY, CFG, rc)
+    mask = PL.window_mask(lora, 2, 4)
+    for ab in mask.values():
+        m = np.asarray(ab["a"]).reshape(CFG.n_layers, -1)[:, 0]
+        np.testing.assert_array_equal(m, [0, 0, 1, 1, 0, 0])
+
+
+# ---------------------------------------------------------------------------
+# store
+# ---------------------------------------------------------------------------
+
+
+def _store_with(n=16, E=16, seed=0):
+    rng = np.random.default_rng(seed)
+    embs = rng.standard_normal((n, E)).astype(np.float32)
+    embs /= np.linalg.norm(embs, axis=-1, keepdims=True)
+    st_ = EmbeddingStore(E)
+    for i in range(n):
+        st_.add(i, embs[i], exit_idx=i % 3, exit_layer=(i % 3) + 1,
+                cached_h=rng.standard_normal((4, E)).astype(np.float32))
+    return st_, embs
+
+
+def test_store_search_self():
+    st_, embs = _store_with()
+    uids, scores = st_.search(embs[5], k=3)
+    assert uids[0] == 5
+
+
+def test_store_upgrade_replaces_and_frees_cache():
+    st_, embs = _store_with()
+    new = np.zeros(16, np.float32)
+    new[0] = 1.0
+    st_.upgrade(3, new)
+    assert st_.entries[st_._index_of(3)].fine
+    assert st_.cached_activation(3) is None
+    uids, _ = st_.search(new, k=1)
+    assert uids[0] == 3
+
+
+def test_store_int4_quantization_error_small():
+    st_, embs = _store_with()
+    dense = st_.dense_matrix()
+    err = np.abs(dense - embs).max()
+    assert err < 1.0 / 7  # int4 step on unit-norm rows
+
+
+def test_storage_accounting():
+    st_, _ = _store_with()
+    b = st_.storage_bytes()
+    assert b["total"] == b["embeddings"] + b["act_cache"]
+    assert b["embeddings"] >= len(st_) * 8  # E/2 packed bytes
+
+
+# ---------------------------------------------------------------------------
+# speculative retrieval
+# ---------------------------------------------------------------------------
+
+
+def test_global_verify_dedups_keeping_best():
+    r1 = (np.array([1, 2, 3]), np.array([0.9, 0.8, 0.7], np.float32))
+    r2 = (np.array([2, 4]), np.array([0.95, 0.5], np.float32))
+    uids, scores = RT.global_verify([r1, r2], k=3)
+    assert uids.tolist() == [2, 1, 3]
+    assert scores[0] == np.float32(0.95)
+
+
+def test_speculative_retrieval_recovers_target_with_oracle_refine():
+    st_, embs = _store_with(n=32)
+    rng = np.random.default_rng(1)
+    fine = embs  # oracle fine embeddings
+    q = 7
+    noisy = embs[q] + 0.5 * rng.standard_normal(16).astype(np.float32)
+    res = RT.speculative_retrieve(
+        st_, [noisy, embs[q]], fine_query=embs[q], k=10,
+        refine_fn=lambda uid: fine[uid])
+    assert res.uids[0] == q
+    assert res.n_refined > 0
+    # result uids must be a subset of the filtered candidates
+    assert set(res.uids.tolist()) <= set(res.filtered_uids.tolist())
+
+
+def test_refine_budget_caps_refinements():
+    st_, embs = _store_with(n=32)
+    res = RT.speculative_retrieve(
+        st_, [embs[3]], fine_query=embs[3], k=10,
+        refine_fn=lambda uid: embs[uid], refine_budget=2)
+    assert res.n_refined <= 2
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(2, 30), st.integers(1, 10), st.integers(1, 3))
+def test_speculative_result_size_invariant(n, k, n_gran):
+    """|result| <= min(k, store size); scores sorted descending."""
+    st_, embs = _store_with(n=n, seed=n)
+    queries = [embs[i % n] for i in range(n_gran)]
+    res = RT.speculative_retrieve(st_, queries, fine_query=embs[0], k=k)
+    assert len(res.uids) <= min(k, n)
+    s = res.scores
+    assert all(s[i] >= s[i + 1] - 1e-6 for i in range(len(s) - 1))

@@ -1,0 +1,126 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import MEMConfig, RecsysConfig, TowerConfig
+from repro.core import scheduler as SC
+from repro.data.pipeline import ShardedLoader
+from repro.data.sampler import CSRGraph, max_sizes, sample_subgraph
+from repro.data.synthetic import (criteo_like, lm_tokens, multimodal_pairs,
+                                  sbm_graph, seq_recsys)
+
+
+class TestSampler:
+    def test_subgraph_validity(self):
+        g = sbm_graph(0, 500, 4, 16)
+        csr = CSRGraph.from_edges(g["src"], g["dst"], 500)
+        sub = sample_subgraph(csr, np.arange(32), (5, 3),
+                              np.random.default_rng(0))
+        n_used = int(sub.node_mask.sum())
+        em = sub.edge_mask.astype(bool)
+        assert (sub.src[em] < n_used).all() and (sub.dst[em] < n_used).all()
+        # seeds pinned to the first local slots
+        np.testing.assert_array_equal(sub.seed_local, np.arange(32))
+        mn, me = max_sizes(32, (5, 3))
+        assert sub.node_ids.shape == (mn,) and sub.src.shape == (me,)
+
+    def test_first_hop_targets_are_seeds(self):
+        g = sbm_graph(1, 200, 3, 8)
+        csr = CSRGraph.from_edges(g["src"], g["dst"], 200)
+        sub = sample_subgraph(csr, np.arange(16), (4,), np.random.default_rng(1))
+        em = sub.edge_mask.astype(bool)
+        assert set(sub.dst[em].tolist()) <= set(range(16))
+
+
+class TestLoader:
+    def test_deterministic_resume(self):
+        data = {"x": np.arange(100).astype(np.float32)}
+        a = ShardedLoader(data, global_batch=16, seed=3)
+        a.take(3)
+        state = a.state_dict()
+        nxt_a = a.take(1)[0]["x"]
+        b = ShardedLoader(data, global_batch=16, seed=3)
+        b.load_state_dict(state)
+        nxt_b = b.take(1)[0]["x"]
+        np.testing.assert_array_equal(nxt_a, nxt_b)
+
+    def test_host_slicing(self):
+        data = {"x": np.arange(64)}
+        parts = []
+        for h in range(2):
+            ld = ShardedLoader(data, global_batch=8, seed=0, host_id=h, n_hosts=2)
+            parts.append(ld.take(1)[0]["x"])
+        assert len(set(parts[0]) & set(parts[1])) == 0
+
+
+class TestSynthetic:
+    def test_lm_markov_structure(self):
+        toks = lm_tokens(0, 8, 64, 50)
+        assert toks.shape == (8, 64) and toks.max() < 50
+
+    def test_criteo_learnable(self):
+        cfg = RecsysConfig(kind="dlrm", embed_dim=8, table_vocabs=(100, 50),
+                           n_dense=13, bot_mlp=(8,), top_mlp=(8, 1))
+        d = criteo_like(0, 200, cfg)
+        assert 0.2 < d["label"].mean() < 0.8
+        assert d["sparse"].max(axis=0).tolist() <= [99, 49]
+
+    def test_multimodal_difficulty_controls_noise(self):
+        cfg = MEMConfig(towers=(TowerConfig("vision", 2, 16, 2, 32, 8, 12),),
+                        embed_dim=16)
+        md = multimodal_pairs(0, 100, cfg)
+        assert md.items["vision"].shape == (100, 8, 12)
+        assert md.difficulty.shape == (100,)
+
+    def test_sbm_homophily(self):
+        g = sbm_graph(0, 400, 4, 8, homophily=0.9)
+        same = (g["labels"][g["src"]] == g["labels"][g["dst"]]).mean()
+        assert same > 0.6
+
+
+class TestExitGroupPlan:
+    @settings(deadline=None, max_examples=30)
+    @given(st.lists(st.integers(0, 4), min_size=1, max_size=100),
+           st.integers(1, 16))
+    def test_partition_property(self, preds, max_batch):
+        """Every sample appears in exactly one batch of its own exit group."""
+        exits = (2, 4, 6, 8, 10)
+        plan = SC.plan_exit_groups(np.asarray(preds), exits, superficial_layers=2)
+        seen = []
+        for exit_idx, exit_layer, ids in plan.batches(max_batch):
+            assert len(ids) <= max_batch
+            assert exit_layer == exits[exit_idx]
+            assert all(preds[i] == exit_idx for i in ids)
+            seen.extend(ids.tolist())
+        assert sorted(seen) == list(range(len(preds)))
+
+
+class TestDeviceSim:
+    COST = SC.model_cost_from_tower(1280, 5120, 32, 257)
+
+    def test_policy_ordering(self):
+        """Qualitative Table-2 ordering: recall >= fluid >= branchynet > mem.
+        Baselines exit late (zero-shot confidence, paper: avg 21.4/32);
+        Recall exits early (healed + pre-exit, avg ~15)."""
+        rng = np.random.default_rng(0)
+        confidence = rng.integers(18, 28, 400)
+        healed = rng.integers(8, 20, 400)
+        res = SC.simulate_all(SC.GEN3, self.COST, confidence, healed, batch=32)
+        thr = {k: v.throughput for k, v in res.items()}
+        assert thr["recall"] >= thr["fluid"] >= thr["branchynet"] > thr["mem"]
+        assert res["recall"].energy_per_item_j < res["mem"].energy_per_item_j
+
+    def test_recall_speedup_order_of_magnitude_on_orin(self):
+        rng = np.random.default_rng(1)
+        confidence = rng.integers(16, 28, 400)
+        healed = rng.integers(2, 10, 400)  # paper: most samples exit early
+        res = SC.simulate_all(SC.ORIN, self.COST, confidence, healed, batch=32)
+        speedup = res["recall"].throughput / res["mem"].throughput
+        assert speedup > 8.0  # paper reports 11.7x on ORIN/COCO
+
+    def test_layerwise_memory_smaller(self):
+        actual = np.full(100, 32)
+        lw = SC.simulate_policy("mem", SC.GEN3, self.COST, actual, layerwise=True)
+        full = SC.simulate_policy("mem", SC.GEN3, self.COST, actual, layerwise=False)
+        assert lw.peak_mem_bytes < full.peak_mem_bytes / 5

@@ -1,0 +1,98 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_reference
+
+CASES = [
+    # B, Sq, Skv, H, KV, D, causal, window, q_offset
+    (2, 128, 128, 4, 2, 32, True, 0, 0),
+    (1, 96, 96, 4, 4, 16, True, 0, 0),      # non-multiple of block
+    (2, 64, 192, 8, 2, 32, True, 0, 128),   # chunked-prefill offset
+    (1, 128, 128, 4, 1, 32, False, 0, 0),   # bidirectional MQA
+    (1, 256, 256, 2, 2, 16, True, 64, 0),   # sliding window
+    (1, 64, 64, 2, 1, 64, True, 0, 0),
+]
+
+
+def _mk(B, Sq, Skv, H, KV, D, dtype, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, Skv, KV, D), dtype)
+    v = jax.random.normal(ks[2], (B, Skv, KV, D), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("block", [32, 64])
+def test_blocked_matches_ref(case, block):
+    B, Sq, Skv, H, KV, D, causal, window, qoff = case
+    q, k, v = _mk(B, Sq, Skv, H, KV, D, jnp.float32)
+    ref = attention_reference(q, k, v, causal=causal, window=window, q_offset=qoff)
+    out = flash_attention(q, k, v, causal=causal, window=window, q_offset=qoff,
+                          block_q=block, block_kv=block)
+    np.testing.assert_allclose(out, ref, atol=3e-5)
+
+
+@pytest.mark.parametrize("case", CASES[:3])
+def test_block_skip_matches(case):
+    B, Sq, Skv, H, KV, D, causal, window, qoff = case
+    q, k, v = _mk(B, Sq, Skv, H, KV, D, jnp.float32)
+    base = flash_attention(q, k, v, causal=causal, window=window, q_offset=qoff,
+                           block_q=32, block_kv=32)
+    skip = flash_attention(q, k, v, causal=causal, window=window, q_offset=qoff,
+                           block_q=32, block_kv=32, block_skip=True)
+    np.testing.assert_allclose(base, skip, atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 3e-5), (jnp.bfloat16, 3e-2)])
+def test_dtypes(dtype, tol):
+    q, k, v = _mk(1, 64, 64, 4, 2, 32, dtype)
+    ref = attention_reference(q.astype(jnp.float32), k.astype(jnp.float32),
+                              v.astype(jnp.float32), causal=True)
+    out = flash_attention(q, k, v, causal=True, block_q=32, block_kv=32)
+    np.testing.assert_allclose(out.astype(jnp.float32), ref, atol=tol)
+
+
+def test_gradients_match_ref():
+    q, k, v = _mk(1, 64, 64, 4, 2, 16, jnp.float32)
+
+    def loss_ref(q, k, v):
+        return jnp.sum(attention_reference(q, k, v, causal=True) ** 2)
+
+    def loss_fa(q, k, v):
+        return jnp.sum(flash_attention(q, k, v, causal=True,
+                                       block_q=16, block_kv=16) ** 2)
+
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    gf = jax.grad(loss_fa, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gr, gf):
+        np.testing.assert_allclose(a, b, atol=5e-4)
+
+
+def test_gradients_window():
+    q, k, v = _mk(1, 64, 64, 2, 2, 16, jnp.float32)
+    gr = jax.grad(lambda q: jnp.sum(attention_reference(
+        q, k, v, causal=True, window=16) ** 2))(q)
+    gf = jax.grad(lambda q: jnp.sum(flash_attention(
+        q, k, v, causal=True, window=16, block_q=16, block_kv=16) ** 2))(q)
+    np.testing.assert_allclose(gr, gf, atol=5e-4)
+
+
+@pytest.mark.parametrize("case", CASES[:4])
+def test_pallas_interpret_matches_ref(case):
+    B, Sq, Skv, H, KV, D, causal, window, qoff = case
+    q, k, v = _mk(B, Sq, Skv, H, KV, D, jnp.float32)
+    ref = attention_reference(q, k, v, causal=causal, window=window, q_offset=qoff)
+    out = flash_attention(q, k, v, causal=causal, window=window, q_offset=qoff,
+                          block_q=32, block_kv=32, impl="pallas")
+    np.testing.assert_allclose(out, ref, atol=3e-5)
+
+
+def test_unroll_matches():
+    q, k, v = _mk(1, 64, 64, 2, 2, 16, jnp.float32)
+    a = flash_attention(q, k, v, causal=True, block_q=32, block_kv=32)
+    b = flash_attention(q, k, v, causal=True, block_q=32, block_kv=32, unroll=True)
+    np.testing.assert_allclose(a, b, atol=1e-6)

@@ -1,0 +1,64 @@
+import numpy as np
+import pytest
+
+from repro.launch import hlo_analysis as H
+
+
+FAKE_HLO = """
+  %ag = bf16[64,128]{1,0} all-gather(bf16[4,128]{1,0} %x), replica_groups=[16,16]<=[256], dimensions={0}
+  %ar = f32[1024]{0} all-reduce(f32[1024]{0} %y), replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add
+  %rs = f32[64]{0} reduce-scatter(f32[512]{0} %z), replica_groups=[32,8]<=[256], dimensions={0}
+  %cp = bf16[32,32]{1,0} collective-permute(bf16[32,32]{1,0} %w), source_target_pairs={{0,1}}
+  %a2a = f32[16,16]{1,0} all-to-all(f32[16,16]{1,0} %v), replica_groups=[16,16]<=[256], dimensions={0}
+  %notacoll = f32[8]{0} add(f32[8]{0} %a, f32[8]{0} %b)
+"""
+
+
+def test_parse_collectives_counts_and_bytes():
+    stats = H.parse_collectives(FAKE_HLO, 256)
+    assert stats.counts == {"all-gather": 1, "all-reduce": 1,
+                            "reduce-scatter": 1, "collective-permute": 1,
+                            "all-to-all": 1}
+    # all-gather: out 64*128*2 bytes * 15/16
+    np.testing.assert_allclose(stats.bytes_by_kind["all-gather"],
+                               64 * 128 * 2 * 15 / 16)
+    # all-reduce: group size 4 -> 2*(3/4)*4096
+    np.testing.assert_allclose(stats.bytes_by_kind["all-reduce"],
+                               2 * 0.75 * 4096)
+    # permute: full payload
+    np.testing.assert_allclose(stats.bytes_by_kind["collective-permute"],
+                               32 * 32 * 2)
+
+
+def test_linear_fit_two():
+    # v = 10 + 3L
+    assert H.linear_fit_two(1, 13, 2, 16, 28) == pytest.approx(10 + 3 * 28)
+
+
+def test_roofline_terms_and_bottleneck():
+    r = H.Roofline(flops_per_device=197e12, hbm_bytes_per_device=819e9 / 2,
+                   wire_bytes_per_device=0.0, n_devices=2,
+                   model_flops_total=2 * 197e12)
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.memory_s == pytest.approx(0.5)
+    assert r.bottleneck == "compute"
+    assert r.useful_ratio == pytest.approx(1.0)
+    assert r.mfu == pytest.approx(1.0)
+
+
+def test_flash_loop_correction_counts_blocks():
+    """1 block pair => zero correction; n pairs => (n-1) bodies' worth."""
+    f0, b0 = H.flash_loop_correction(B=1, KV=1, G=1, D=8, Sq=16, Skv=16,
+                                     bq=16, bkv=16, train=False, remat=False)
+    assert f0 == 0.0 and b0 == 0.0
+    f1, _ = H.flash_loop_correction(B=1, KV=1, G=1, D=8, Sq=32, Skv=32,
+                                    bq=16, bkv=16, train=False, remat=False)
+    # 4 pairs - 1 = 3 bodies x (4*bq*bkv*D + 8*bq*bkv)
+    assert f1 == pytest.approx(3 * (4 * 16 * 16 * 8 + 8 * 16 * 16))
+
+
+def test_shape_bytes_tuple_results():
+    stats = H.parse_collectives(
+        "%t = (f32[8]{0}, f32[8]{0}) all-reduce(f32[8]{0} %a, f32[8]{0} %b), "
+        "replica_groups={{0,1}}", 2)
+    assert stats.bytes_by_kind["all-reduce"] == pytest.approx(2 * 0.5 * 64)

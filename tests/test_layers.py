@@ -1,0 +1,101 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import layers as L
+
+
+def test_schema_init_specs_structures_match():
+    schema = {"a": L.ParamDef((4, 8), ("embed", "mlp")),
+              "b": {"c": L.rmsnorm_schema(8)}}
+    params = L.init_params(jax.random.PRNGKey(0), schema)
+    specs = L.param_specs(schema)
+    abstract = L.abstract_params(schema)
+    assert jax.tree.structure(params) == jax.tree.structure(
+        specs, is_leaf=lambda x: isinstance(x, tuple))
+    for p, ab in zip(jax.tree.leaves(params), jax.tree.leaves(abstract)):
+        assert p.shape == ab.shape and p.dtype == ab.dtype
+
+
+def test_rmsnorm_matches_manual():
+    x = jax.random.normal(jax.random.PRNGKey(0), (3, 16))
+    s = jnp.ones(16) * 2.0
+    out = L.rmsnorm(x, s, eps=0.0)
+    manual = x / jnp.sqrt(jnp.mean(x**2, -1, keepdims=True)) * 2.0
+    np.testing.assert_allclose(out, manual, rtol=1e-5)
+
+
+def test_layernorm_zero_mean_unit_var():
+    x = jax.random.normal(jax.random.PRNGKey(1), (5, 32)) * 3 + 7
+    out = L.layernorm(x, jnp.ones(32), jnp.zeros(32), eps=0.0)
+    np.testing.assert_allclose(np.mean(np.asarray(out), -1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(np.var(np.asarray(out), -1), 1.0, rtol=1e-4)
+
+
+def test_rope_preserves_norm_and_relative_phase():
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 8, 2, 16))
+    pos = jnp.arange(8)[None]
+    y = L.apply_rope(x, pos)
+    np.testing.assert_allclose(jnp.linalg.norm(y, axis=-1),
+                               jnp.linalg.norm(x, axis=-1), rtol=1e-5)
+    # relative property: <rope(q,i), rope(k,j)> depends only on i-j
+    q = jax.random.normal(jax.random.PRNGKey(3), (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.PRNGKey(4), (1, 1, 1, 16))
+    def dot_at(i, j):
+        qi = L.apply_rope(q, jnp.array([[i]]))
+        kj = L.apply_rope(k, jnp.array([[j]]))
+        return float(jnp.sum(qi * kj))
+    assert abs(dot_at(3, 1) - dot_at(7, 5)) < 1e-4
+
+
+def test_gqa_attention_matches_mha_when_repeated():
+    B, S, KV, G, D = 2, 6, 2, 3, 8
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, S, KV * G, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, KV, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, KV, D))
+    out = L.multihead_attention(q, k, v)
+    k_rep = jnp.repeat(k, G, axis=2)
+    v_rep = jnp.repeat(v, G, axis=2)
+    out_mha = L.multihead_attention(q, k_rep, v_rep)
+    np.testing.assert_allclose(out, out_mha, atol=2e-5)
+
+
+def test_cross_entropy_matches_manual():
+    logits = jax.random.normal(jax.random.PRNGKey(0), (4, 7))
+    labels = jnp.array([0, 3, 6, 2])
+    got = L.cross_entropy(logits, labels)
+    p = jax.nn.log_softmax(logits)
+    want = -jnp.mean(p[jnp.arange(4), labels])
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_cross_entropy_mask():
+    logits = jax.random.normal(jax.random.PRNGKey(0), (4, 7))
+    labels = jnp.array([0, 3, 6, 2])
+    m = jnp.array([1.0, 1.0, 0.0, 0.0])
+    got = L.cross_entropy(logits, labels, mask=m)
+    want = L.cross_entropy(logits[:2], labels[:2])
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_mlp_apply():
+    schema = L.mlp_schema((4, 8, 2))
+    p = L.init_params(jax.random.PRNGKey(0), schema)
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 4))
+    out = L.mlp_apply(p, x, act=jax.nn.relu)
+    manual = jax.nn.relu(x @ p["w0"] + p["b0"]) @ p["w1"] + p["b1"]
+    np.testing.assert_allclose(out, manual, rtol=1e-6)
+
+
+def test_l2_normalize():
+    x = jax.random.normal(jax.random.PRNGKey(0), (5, 9)) * 10
+    n = jnp.linalg.norm(L.l2_normalize(x), axis=-1)
+    np.testing.assert_allclose(n, 1.0, rtol=1e-5)
+
+
+def test_attention_mask_window():
+    m = L.attention_scores_mask(4, 4, causal=True, window=2)
+    expect = np.array([[1, 0, 0, 0], [1, 1, 0, 0], [0, 1, 1, 0], [0, 0, 1, 1]],
+                      dtype=bool)
+    np.testing.assert_array_equal(np.asarray(m), expect)

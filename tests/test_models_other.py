@@ -1,0 +1,176 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (GNNConfig, MEMConfig, RecallConfig,
+                                RecsysConfig, TowerConfig)
+from repro.models import gnn as G
+from repro.models import imagebind as IB
+from repro.models import recsys as R
+
+RC = RecallConfig(exit_interval=1, superficial_layers=1)
+KEY = jax.random.PRNGKey(0)
+
+
+def _graph(N=32, E=96, F=8, C=5, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    return G.Graph(
+        node_feat=jax.random.normal(ks[0], (N, F)),
+        src=jax.random.randint(ks[1], (E,), 0, N),
+        dst=jax.random.randint(ks[2], (E,), 0, N),
+        node_mask=jnp.ones(N), edge_mask=jnp.ones(E),
+        labels=jax.random.randint(ks[3], (N,), 0, C))
+
+
+class TestGNN:
+    CFG = GNNConfig(n_layers=3, d_hidden=16, d_feat=8, n_classes=5)
+
+    def test_loss_grads(self):
+        p = G.gnn_init(KEY, self.CFG, RC, embed_out=16)
+        g = _graph()
+        loss, m = G.gnn_loss(p, self.CFG, RC, g)
+        assert np.isfinite(float(loss))
+        gr = jax.grad(lambda p_: G.gnn_loss(p_, self.CFG, RC, g)[0])(p)
+        assert all(np.isfinite(np.asarray(x)).all() for x in jax.tree.leaves(gr))
+
+    def test_padded_edges_do_not_contribute(self):
+        p = G.gnn_init(KEY, self.CFG, RC, embed_out=16)
+        g = _graph(E=64)
+        # same graph with 32 masked junk edges appended
+        ks = jax.random.split(jax.random.PRNGKey(9), 2)
+        g_pad = G.Graph(
+            node_feat=g.node_feat,
+            src=jnp.concatenate([g.src, jax.random.randint(ks[0], (32,), 0, 32)]),
+            dst=jnp.concatenate([g.dst, jax.random.randint(ks[1], (32,), 0, 32)]),
+            node_mask=g.node_mask,
+            edge_mask=jnp.concatenate([g.edge_mask, jnp.zeros(32)]),
+            labels=g.labels)
+        o1 = G.gnn_forward(p, self.CFG, RC, g)["h"]
+        o2 = G.gnn_forward(p, self.CFG, RC, g_pad)["h"]
+        np.testing.assert_allclose(o1, o2, atol=1e-5)
+
+    def test_exit_embeddings(self):
+        p = G.gnn_init(KEY, self.CFG, RC, embed_out=16)
+        embs = G.gnn_exit_embeddings(p, self.CFG, RC, _graph())
+        assert embs.shape == (3, 16)
+        np.testing.assert_allclose(jnp.linalg.norm(embs, axis=-1), 1.0, rtol=1e-5)
+
+    def test_prefix_refine_consistency(self):
+        """GNN variant of the cached-refinement invariant."""
+        p = G.gnn_init(KEY, self.CFG, RC, embed_out=16)
+        g = _graph()
+        part = G.gnn_forward(p, self.CFG, RC, g, layer_end=2)
+        resumed = G.gnn_forward(p, self.CFG, RC, g, layer_start=2,
+                                h_state=part["h"], e_state=part["e"])
+        full = G.gnn_forward(p, self.CFG, RC, g)
+        np.testing.assert_array_equal(np.asarray(resumed["h"]),
+                                      np.asarray(full["h"]))
+
+    def test_batched(self):
+        p = G.gnn_init(KEY, self.CFG, RC, embed_out=16)
+        gs = G.Graph(*[jnp.stack([x, x]) for x in _graph()])
+        loss, _ = G.gnn_loss_batched(p, self.CFG, RC, gs)
+        assert np.isfinite(float(loss))
+
+
+RECSYS_CASES = [
+    ("dlrm", RecsysConfig(kind="dlrm", embed_dim=16, table_vocabs=(50, 30, 40),
+                          n_dense=13, bot_mlp=(32, 16), top_mlp=(32, 16, 1))),
+    ("bst", RecsysConfig(kind="bst", embed_dim=16, seq_len=8, item_vocab=100,
+                         n_heads=4, n_blocks=1, mlp=(32, 16))),
+    ("sasrec", RecsysConfig(kind="sasrec", embed_dim=16, seq_len=8,
+                            item_vocab=100, n_heads=1, n_blocks=2)),
+    ("dien", RecsysConfig(kind="dien", embed_dim=8, seq_len=10, item_vocab=100,
+                          gru_dim=12, mlp=(20, 8))),
+]
+
+
+def _recsys_batch(cfg, B=4, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 8)
+    if cfg.kind == "dlrm":
+        return {"dense": jax.random.normal(ks[0], (B, 13)),
+                "sparse": jax.random.randint(ks[1], (B, 3), 0, 30),
+                "label": jax.random.bernoulli(ks[2], 0.3, (B,))}
+    base = {"hist": jax.random.randint(ks[0], (B, cfg.seq_len), 0, cfg.item_vocab),
+            "target": jax.random.randint(ks[1], (B,), 0, cfg.item_vocab),
+            "label": jax.random.bernoulli(ks[2], 0.3, (B,))}
+    if cfg.kind == "bst":
+        base["other"] = jax.random.normal(ks[3], (B, R.BST_OTHER_DIM))
+    if cfg.kind == "sasrec":
+        base["pos"] = jax.random.randint(ks[4], (B, cfg.seq_len), 0, cfg.item_vocab)
+        base["neg"] = jax.random.randint(ks[5], (B, cfg.seq_len), 0, cfg.item_vocab)
+    if cfg.kind == "dien":
+        base["hist_cate"] = jax.random.randint(ks[6], (B, cfg.seq_len), 0, 16)
+        base["target_cate"] = jax.random.randint(ks[7], (B,), 0, 16)
+    return base
+
+
+@pytest.mark.parametrize("kind,cfg", RECSYS_CASES)
+def test_recsys_loss_grads_retrieval(kind, cfg):
+    p = R.recsys_init(KEY, cfg)
+    batch = _recsys_batch(cfg)
+    loss, _ = R.recsys_loss(p, cfg, batch)
+    assert np.isfinite(float(loss))
+    g = jax.grad(lambda p_: R.recsys_loss(p_, cfg, batch)[0])(p)
+    assert all(np.isfinite(np.asarray(x)).all() for x in jax.tree.leaves(g))
+    scores = R.retrieval_scores(p, cfg, batch, n_candidates=20)
+    assert scores.shape == (4, 20) and np.isfinite(np.asarray(scores)).all()
+
+
+def test_embedding_bag_modes():
+    table = jax.random.normal(KEY, (10, 4))
+    ids = jnp.array([[1, 2, 3], [4, 4, 0]])
+    mask = jnp.array([[1.0, 1.0, 0.0], [1.0, 0.0, 0.0]])
+    s = R.embedding_bag(table, ids, mask, mode="sum")
+    np.testing.assert_allclose(s[0], table[1] + table[2], atol=1e-6)
+    m = R.embedding_bag(table, ids, mask, mode="mean")
+    np.testing.assert_allclose(m[0], (table[1] + table[2]) / 2, atol=1e-6)
+
+
+def test_embedding_bag_ragged_matches_fixed():
+    table = jax.random.normal(KEY, (10, 4))
+    flat_ids = jnp.array([1, 2, 4])
+    seg = jnp.array([0, 0, 1])
+    out = R.embedding_bag_ragged(table, flat_ids, seg, num_bags=2)
+    np.testing.assert_allclose(out[0], table[1] + table[2], atol=1e-6)
+    np.testing.assert_allclose(out[1], table[4], atol=1e-6)
+
+
+class TestMEM:
+    CFG = MEMConfig(towers=(TowerConfig("vision", 3, 32, 2, 64, 16, 24),
+                            TowerConfig("text", 2, 32, 2, 64, 12, 0, vocab=256),
+                            TowerConfig("imu", 2, 32, 2, 64, 10, 6)),
+                    embed_dim=32)
+    FW = dict(block_q=8, block_kv=8)
+
+    def _batch(self, B=4):
+        ks = jax.random.split(KEY, 3)
+        return {"vision": jax.random.normal(ks[0], (B, 16, 24)),
+                "text": jax.random.randint(ks[1], (B, 12), 0, 256),
+                "imu": jax.random.normal(ks[2], (B, 10, 6))}
+
+    def test_contrastive_loss_grads(self):
+        p = IB.mem_init(KEY, self.CFG, RC)
+        loss, m = IB.mem_contrastive_loss(p, self.CFG, RC, self._batch(), **self.FW)
+        assert np.isfinite(float(loss)) and "nce_text" in m
+        g = jax.grad(lambda p_: IB.mem_contrastive_loss(
+            p_, self.CFG, RC, self._batch(), **self.FW)[0])(p)
+        assert all(np.isfinite(np.asarray(x)).all() for x in jax.tree.leaves(g))
+
+    def test_refine_matches_full(self):
+        p = IB.mem_init(KEY, self.CFG, RC)
+        b = self._batch()
+        z = IB.mem_embed(p, self.CFG, RC, "vision", b["vision"], **self.FW)
+        part = IB.tower_forward(p, self.CFG, RC, "vision", b["vision"],
+                                layer_end=2, **self.FW)
+        zr = IB.mem_refine(p, self.CFG, RC, "vision", part["h"], start=2, **self.FW)
+        np.testing.assert_array_equal(np.asarray(z), np.asarray(zr))
+
+    def test_all_exits_shapes(self):
+        p = IB.mem_init(KEY, self.CFG, RC)
+        out = IB.mem_embed_all_exits(p, self.CFG, RC, "vision",
+                                     self._batch()["vision"], **self.FW)
+        assert out["exit_embs"].shape == (3, 4, 32)
+        np.testing.assert_allclose(jnp.linalg.norm(out["exit_embs"], axis=-1),
+                                   1.0, rtol=1e-4)

@@ -1,0 +1,135 @@
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer, CheckpointManager
+from repro.distributed.elastic import validate_divisibility
+from repro.distributed.straggler import Action, StragglerMonitor, TokenSkewMonitor
+from repro.optim.adamw import AdamW, accumulate_grads, global_norm
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestAdamW:
+    def test_converges_on_quadratic(self):
+        target = jnp.array([1.0, -2.0, 3.0])
+        params = {"w": jnp.zeros(3)}
+        opt = AdamW(lr=0.1, weight_decay=0.0)
+        state = opt.init(params)
+        for _ in range(300):
+            g = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+            params, state, _ = opt.update(g, state, params)
+        np.testing.assert_allclose(params["w"], target, atol=1e-2)
+
+    def test_clipping(self):
+        params = {"w": jnp.zeros(4)}
+        opt = AdamW(lr=1.0, clip_norm=1.0, weight_decay=0.0)
+        state = opt.init(params)
+        g = {"w": jnp.full(4, 100.0)}
+        _, _, m = opt.update(g, state, params)
+        assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+    def test_grad_mask_freezes(self):
+        params = {"a": jnp.ones(2), "b": jnp.ones(2)}
+        opt = AdamW(lr=0.1, weight_decay=0.0)
+        state = opt.init(params)
+        g = {"a": jnp.ones(2), "b": jnp.ones(2)}
+        mask = {"a": jnp.ones(2), "b": jnp.zeros(2)}
+        p2, _, _ = opt.update(g, state, params, grad_mask=mask)
+        assert float(jnp.max(jnp.abs(p2["b"] - 1.0))) == 0.0
+        assert float(jnp.max(jnp.abs(p2["a"] - 1.0))) > 0.0
+
+    def test_accumulate_grads_matches_full_batch(self):
+        w = {"w": jax.random.normal(KEY, (4,))}
+        x = jax.random.normal(jax.random.PRNGKey(1), (8, 4))
+
+        def loss(p, batch):
+            return jnp.mean((batch @ p["w"]) ** 2)
+
+        _, g_full = jax.value_and_grad(loss)(w, x)
+        _, g_acc = accumulate_grads(loss, w, x, microbatches=4)
+        np.testing.assert_allclose(g_full["w"], g_acc["w"], rtol=1e-5)
+
+
+class TestCheckpointer:
+    def test_roundtrip_retention_async(self):
+        with tempfile.TemporaryDirectory() as d:
+            ck = Checkpointer(d, keep=2)
+            tree = {"a": jnp.arange(6.0), "b": {"c": jnp.ones((2, 3))}}
+            for s in (1, 2, 3):
+                ck.save(s, jax.tree.map(lambda x: x * s, tree), meta={"s": s})
+            assert ck.all_steps() == [2, 3]
+            r, man = ck.restore(tree)
+            np.testing.assert_allclose(r["a"], jnp.arange(6.0) * 3)
+            assert man["meta"]["s"] == 3
+            ck.save_async(4, tree)
+            ck.wait()
+            assert ck.latest_step() == 4
+
+    def test_tmp_dir_never_visible(self):
+        with tempfile.TemporaryDirectory() as d:
+            ck = Checkpointer(d, keep=5)
+            ck.save(1, {"x": jnp.ones(3)})
+            names = os.listdir(d)
+            assert not any(n.endswith(".tmp") for n in names)
+
+    def test_milestones_kept(self):
+        with tempfile.TemporaryDirectory() as d:
+            ck = Checkpointer(d, keep=1, milestone_every=10)
+            for s in (5, 10, 15, 20):
+                ck.save(s, {"x": jnp.ones(1)})
+            assert set(ck.all_steps()) == {10, 20}
+
+    def test_manager_preemption_forces_blocking_save(self):
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, save_interval=100)
+            assert not mgr.should_save(5)
+            mgr.signal_preemption()
+            assert mgr.should_save(5)
+            mgr.save(5, {"x": jnp.ones(1)})
+            assert mgr.ckpt.latest_step() == 5
+
+
+class TestElastic:
+    def test_validate_divisibility(self):
+        import jax.sharding as sh
+        mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                                 ("data", "model"))
+        good = jax.ShapeDtypeStruct((8, 4), jnp.float32)
+        s = sh.NamedSharding(mesh, sh.PartitionSpec("data", None))
+        assert validate_divisibility({"w": good}, {"w": s}) == []
+
+
+class TestStraggler:
+    def test_detects_persistent_straggler(self):
+        mon = StragglerMonitor(n_hosts=4, patience=3, warmup=5)
+        rng = np.random.default_rng(0)
+        fired = []
+        for step in range(25):
+            t = rng.normal(1.0, 0.02, 4)
+            if step >= 10:
+                t[2] += 2.0
+            fired.append(mon.record(t))
+        restarts = [d for d in fired if d.action == Action.RESTART_WITHOUT_HOST]
+        assert restarts and restarts[0].host == 2
+
+    def test_no_false_positive_on_uniform(self):
+        mon = StragglerMonitor(n_hosts=4, patience=3, warmup=5)
+        rng = np.random.default_rng(1)
+        for _ in range(40):
+            d = mon.record(rng.normal(1.0, 0.02, 4))
+        assert all(x.action != Action.RESTART_WITHOUT_HOST for x in mon.history)
+
+    def test_token_skew(self):
+        mon = TokenSkewMonitor(window=10)
+        rng = np.random.default_rng(2)
+        tokens = np.array([100.0, 100, 100, 300])
+        out = None
+        for _ in range(10):
+            times = tokens / 100.0 + rng.normal(0, 0.01, 4)
+            out = mon.record(times, tokens)
+        assert out.action == Action.REBALANCE

@@ -1,0 +1,143 @@
+"""End-to-end serving integration: engine policies, store invariants,
+query-time refinement, upgrade-on-query, healing + P-LoRA pipeline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MEMConfig, RecallConfig, TowerConfig
+from repro.core import exits as EX
+from repro.core import preexit as PE
+from repro.core.healing import HealConfig, heal_tower
+from repro.data.synthetic import multimodal_pairs
+from repro.models import imagebind as IB
+from repro.serving.engine import EmbeddingEngine
+from repro.serving.query import QueryEngine
+
+CFG = MEMConfig(towers=(TowerConfig("vision", 4, 32, 2, 64, 12, 16),
+                        TowerConfig("text", 3, 32, 2, 64, 8, 0, vocab=128)),
+                embed_dim=32)
+RC = RecallConfig(exit_interval=1, superficial_layers=2, predictor_hidden=32,
+                  lora_rank=4, query_granularities=2)
+FW = dict(block_q=8, block_kv=8)
+
+
+@pytest.fixture(scope="module")
+def service():
+    key = jax.random.PRNGKey(0)
+    params = IB.mem_init(key, CFG, RC)
+    data = multimodal_pairs(0, 96, CFG)
+    vis = jnp.asarray(data.items["vision"])
+    out = IB.mem_embed_all_exits(params, CFG, RC, "vision", vis, **FW)
+    labels = EX.optimal_exit_labels(out["exit_embs"], out["exit_embs"][-1])
+    sup = IB.tower_forward(params, CFG, RC, "vision", vis,
+                           layer_end=RC.superficial_layers, **FW)["pooled"][-1]
+    predictor, _ = PE.train_predictor(key, sup, labels,
+                                      n_exits=len(out["exits"]), hidden=32,
+                                      steps=80)
+    return params, predictor, data
+
+
+def _engine(params, predictor, policy="recall"):
+    return EmbeddingEngine(params, CFG, RC, modality="vision",
+                           predictor_params=predictor, policy=policy,
+                           max_batch=16, fw_kw=FW)
+
+
+def test_engine_embeds_and_stores(service):
+    params, predictor, data = service
+    eng = _engine(params, predictor)
+    eng.submit_batch(np.arange(32), data.items["vision"][:32])
+    stats = eng.drain()
+    assert stats.n_embedded == 32 and len(eng.store) == 32
+    assert stats.avg_layers <= CFG.tower("vision").n_layers
+
+
+def test_full_policy_matches_direct_fine_embedding(service):
+    params, predictor, data = service
+    eng = _engine(params, predictor, policy="full")
+    eng.submit_batch(np.arange(16), data.items["vision"][:16])
+    eng.drain()
+    direct = np.asarray(IB.mem_embed(params, CFG, RC, "vision",
+                                     jnp.asarray(data.items["vision"][:16]),
+                                     **FW))
+    stored = eng.store.dense_matrix()
+    # int4 storage quantization is the only difference
+    assert np.abs(stored - direct).max() < 1.0 / 7 + 1e-3
+
+
+def test_refine_fn_reproduces_full_embedding(service):
+    """Cached-activation refinement == direct full embedding up to the INT4
+    cache quantization error."""
+    params, predictor, data = service
+    eng = _engine(params, predictor, policy="fixed")
+    eng.fixed_exit = RC.superficial_layers + 1
+    eng.submit_batch(np.arange(8), data.items["vision"][:8])
+    eng.drain()
+    refine = eng.refine_fn()
+    direct = np.asarray(IB.mem_embed(params, CFG, RC, "vision",
+                                     jnp.asarray(data.items["vision"][:1]),
+                                     **FW))[0]
+    got = refine(0)
+    cos = float(np.dot(got, direct))
+    # INT4 activation-cache quantization error propagates through the
+    # remaining layers (paper §3.4 accepts this); exactness without
+    # quantization is covered by test_refine_from_cached_is_exact.
+    assert cos > 0.85, cos
+
+
+def test_query_upgrade_on_query(service):
+    params, predictor, data = service
+    eng = _engine(params, predictor)
+    eng.submit_batch(np.arange(32), data.items["vision"][:32])
+    eng.drain()
+    q = QueryEngine(params, CFG, RC, store=eng.store,
+                    refine_fn=eng.refine_fn(), query_modality="text", fw_kw=FW)
+    res1 = q.query(data.items["text"][3], k=8)
+    assert res1.n_refined > 0
+    # §5.3: queried items are permanently upgraded -> second query refines
+    # strictly fewer items
+    res2 = q.query(data.items["text"][3], k=8)
+    assert res2.n_refined < res1.n_refined or res2.n_refined == 0
+
+
+def test_query_latency_budget(service):
+    params, predictor, data = service
+    eng = _engine(params, predictor)
+    eng.submit_batch(np.arange(24), data.items["vision"][:24])
+    eng.drain()
+    q = QueryEngine(params, CFG, RC, store=eng.store,
+                    refine_fn=eng.refine_fn(), query_modality="text", fw_kw=FW)
+    res = q.query(data.items["text"][0], k=10, refine_budget=3)
+    assert res.n_refined <= 3
+
+
+def test_branchynet_policy_runs(service):
+    params, predictor, data = service
+    eng = _engine(params, predictor, policy="branchynet")
+    eng.submit_batch(np.arange(4), data.items["vision"][:4])
+    stats = eng.drain()
+    assert stats.n_embedded == 4
+
+
+def test_healing_improves_coarse_alignment():
+    """P-LoRA healing must increase cos(coarse, fine) on the healed tower."""
+    key = jax.random.PRNGKey(1)
+    params = IB.mem_init(key, CFG, RC)
+    data = multimodal_pairs(1, 64, CFG)
+    vis = jnp.asarray(data.items["vision"])
+
+    fine0 = IB.mem_embed(params, CFG, RC, "vision", vis, **FW)
+
+    def mean_alignment(lora):
+        out = IB.mem_embed_all_exits(params, CFG, RC, "vision", vis,
+                                     lora=lora, **FW)
+        return float(jnp.mean(jnp.sum(out["exit_embs"][0] * fine0, -1)))
+
+    before = mean_alignment(None)
+    lora, log = heal_tower(key, params, CFG, RC, "vision", vis,
+                           heal_cfg=HealConfig(lr=3e-3, steps_per_phase=25,
+                                               batch=32), fw_kw=FW)
+    after = mean_alignment(lora)
+    assert after > before + 0.02, (before, after)
+    assert all(p["loss_last"] <= p["loss_first"] + 0.05 for p in log)

@@ -1,0 +1,166 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.models.layers as L
+from repro.configs.base import LMConfig, MoEConfig, RecallConfig
+from repro.core import plora as PL
+from repro.models import transformer as T
+
+CFG = LMConfig(n_layers=4, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+               vocab=128, d_head=16, qkv_bias=True, dtype="float32")
+RC = RecallConfig(exit_interval=2, superficial_layers=1)
+FW = dict(block_q=8, block_kv=8)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    key = jax.random.PRNGKey(0)
+    params = T.lm_init(key, CFG, RC, embed_out=32)
+    tokens = jax.random.randint(key, (2, 16), 0, CFG.vocab)
+    labels = jnp.roll(tokens, -1, axis=1)
+    return params, tokens, labels
+
+
+def test_loss_and_grads_finite(setup):
+    params, tokens, labels = setup
+    loss, m = T.lm_loss(params, CFG, RC, tokens, labels, chunk=8, **FW)
+    assert np.isfinite(float(loss))
+    g = jax.grad(lambda p: T.lm_loss(p, CFG, RC, tokens, labels, chunk=8, **FW)[0])(params)
+    assert all(np.isfinite(np.asarray(x)).all() for x in jax.tree.leaves(g))
+
+
+def test_remat_equivalence(setup):
+    params, tokens, labels = setup
+    l0, _ = T.lm_loss(params, CFG, RC, tokens, labels, chunk=8, **FW)
+    l1, _ = T.lm_loss(params, CFG, RC, tokens, labels, chunk=8, remat=True, **FW)
+    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-6)
+
+
+def test_unroll_equivalence(setup):
+    params, tokens, labels = setup
+    l0, _ = T.lm_loss(params, CFG, RC, tokens, labels, chunk=8, **FW)
+    l1, _ = T.lm_loss(params, CFG, RC, tokens, labels, chunk=8, unroll=True, **FW)
+    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-5)
+
+
+def test_chunk_invariance(setup):
+    params, tokens, labels = setup
+    l0, _ = T.lm_loss(params, CFG, RC, tokens, labels, chunk=4, **FW)
+    l1, _ = T.lm_loss(params, CFG, RC, tokens, labels, chunk=16, **FW)
+    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-5)
+
+
+def test_exit_embeddings_normalized(setup):
+    params, tokens, _ = setup
+    out = T.encode_exits(params, CFG, RC, tokens=tokens, **FW)
+    assert out["exit_embs"].shape[0] == len(RC.exit_layers(CFG.n_layers))
+    np.testing.assert_allclose(
+        jnp.linalg.norm(out["exit_embs"], axis=-1), 1.0, rtol=1e-4)
+
+
+def test_encode_at_matches_exit_tap(setup):
+    params, tokens, _ = setup
+    full = T.encode_exits(params, CFG, RC, tokens=tokens, **FW)
+    e = full["exits"][0]
+    oa = T.encode_at(params, CFG, RC, e, tokens=tokens, **FW)
+    np.testing.assert_allclose(oa["emb"], full["exit_embs"][0], atol=1e-6)
+
+
+def test_refine_from_cached_is_exact(setup):
+    """Paper §3.4 invariant: resuming from cached layer-k activations must
+    reproduce the full-depth embedding bit-exactly."""
+    params, tokens, _ = setup
+    part = T.forward_hidden(params, CFG, RC, tokens=tokens, layer_end=2, **FW)
+    ref = T.refine_from(params, CFG, RC, part["h"], start=2, **FW)
+    full = T.encode_exits(params, CFG, RC, tokens=tokens, **FW)
+    np.testing.assert_array_equal(np.asarray(ref["emb"]),
+                                  np.asarray(full["exit_embs"][-1]))
+
+
+def test_prefill_decode_consistency(setup):
+    params, tokens, _ = setup
+    B, S = tokens.shape
+    pf = T.prefill(params, CFG, RC, tokens, pad_to=S + 4, **FW)
+    nxt = jnp.array([5, 7])
+    lengths = jnp.full((B,), S + 1, jnp.int32)
+    logits, _, _ = T.decode_step(params, CFG, RC, nxt, pf["k_cache"],
+                                 pf["v_cache"], lengths)
+    toks2 = jnp.concatenate([tokens, nxt[:, None]], axis=1)
+    o = T.forward_hidden(params, CFG, RC, tokens=toks2, **FW)
+    h = L.rmsnorm(o["h"][:, -1], params["final_norm"], CFG.norm_eps)
+    want = h.astype(jnp.float32) @ T._lm_head(params, CFG).astype(jnp.float32)
+    np.testing.assert_allclose(logits, want, atol=1e-4)
+
+
+def test_decode_ragged_lengths(setup):
+    """Per-sequence lengths: each row must match its own-length full forward."""
+    params, tokens, _ = setup
+    B, S = tokens.shape
+    pf = T.prefill(params, CFG, RC, tokens, pad_to=S + 4, **FW)
+    lengths = jnp.array([9, S + 1], jnp.int32)  # row 0 decodes at position 8
+    nxt = jnp.array([3, 4])
+    logits, _, _ = T.decode_step(params, CFG, RC, nxt, pf["k_cache"],
+                                 pf["v_cache"], lengths)
+    toks_short = jnp.concatenate([tokens[:1, :8], nxt[:1, None]], axis=1)
+    o = T.forward_hidden(params, CFG, RC, tokens=toks_short, **FW)
+    h = L.rmsnorm(o["h"][:, -1], params["final_norm"], CFG.norm_eps)
+    want = h.astype(jnp.float32) @ T._lm_head(params, CFG).astype(jnp.float32)
+    np.testing.assert_allclose(logits[0], want[0], atol=1e-4)
+
+
+def test_moe_stack_trains():
+    cfg = LMConfig(n_layers=2, d_model=32, n_heads=2, n_kv_heads=2, d_ff=0,
+                   vocab=64, d_head=16,
+                   moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=48,
+                                 n_shared_experts=1), dtype="float32")
+    key = jax.random.PRNGKey(1)
+    params = T.lm_init(key, cfg, RC, embed_out=16)
+    tokens = jax.random.randint(key, (2, 16), 0, 64)
+    labels = jnp.roll(tokens, -1, 1)
+    loss, m = T.lm_loss(params, cfg, RC, tokens, labels, chunk=8, **FW)
+    assert np.isfinite(float(loss)) and float(m["aux"]) > 0
+    g = jax.grad(lambda p: T.lm_loss(p, cfg, RC, tokens, labels, chunk=8, **FW)[0])(params)
+    gn = sum(float(jnp.sum(jnp.abs(x))) for x in jax.tree.leaves(g))
+    assert np.isfinite(gn) and gn > 0
+
+
+def test_tied_embeddings():
+    cfg = LMConfig(n_layers=2, d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                   vocab=64, d_head=16, tie_embeddings=True, dtype="float32")
+    params = T.lm_init(jax.random.PRNGKey(0), cfg, RC, embed_out=16)
+    assert "lm_head" not in params
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, 64)
+    loss, _ = T.lm_loss(params, cfg, RC, tokens, jnp.roll(tokens, -1, 1),
+                        chunk=8, **FW)
+    assert np.isfinite(float(loss))
+
+
+def test_lora_merge_equals_on_the_fly(setup):
+    params, tokens, _ = setup
+    rc = RecallConfig(exit_interval=2, lora_rank=4)
+    lora = PL.lora_init(jax.random.PRNGKey(2), CFG, rc)
+    lora = jax.tree.map(
+        lambda x: x + 0.02 * jax.random.normal(jax.random.PRNGKey(3), x.shape),
+        lora)
+    o1 = T.forward_hidden(params, CFG, rc, tokens=tokens, lora=lora, **FW)["h"]
+    o2 = T.forward_hidden(PL.merge_lora(params, lora, rc), CFG, rc,
+                          tokens=tokens, **FW)["h"]
+    np.testing.assert_allclose(o1, o2, atol=2e-3)
+
+
+def test_lora_zero_init_is_identity(setup):
+    params, tokens, _ = setup
+    rc = RecallConfig(exit_interval=2, lora_rank=4)
+    lora = PL.lora_init(jax.random.PRNGKey(4), CFG, rc)
+    o0 = T.forward_hidden(params, CFG, rc, tokens=tokens, **FW)["h"]
+    o1 = T.forward_hidden(params, CFG, rc, tokens=tokens, lora=lora, **FW)["h"]
+    np.testing.assert_allclose(o0, o1, atol=1e-6)
+
+
+def test_window_attention_changes_output(setup):
+    params, tokens, _ = setup
+    o_full = T.forward_hidden(params, CFG, RC, tokens=tokens, **FW)["h"]
+    o_win = T.forward_hidden(params, CFG, RC, tokens=tokens, window=4, **FW)["h"]
+    assert float(jnp.max(jnp.abs(o_full - o_win))) > 1e-4
