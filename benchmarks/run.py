@@ -21,6 +21,7 @@ SUITES = [
     ("fig15_latency", "Fig 15: query latency budget"),
     ("fig16_energy", "Fig 16: energy & memory"),
     ("storage_cost", "§5.4: storage cost"),
+    ("store_scale", "Store scaling: insert throughput & query latency"),
     ("roofline", "§Roofline: dry-run report"),
 ]
 

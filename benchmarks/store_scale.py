@@ -1,0 +1,118 @@
+"""Store scaling: insert throughput + query latency vs store size.
+
+Measures, at 1k/10k/100k items:
+  * batched insert path (``add_batch``: one quantize call per chunk) vs the
+    seed-style per-item path (one ``add`` → one device round-trip per item),
+  * query latency of the numpy matmul+argpartition path vs the fused Pallas
+    ``retrieval_topk`` path (``search_batch``), with a parity check that both
+    return identical uids.
+
+Emits ``BENCH_store_scale.json`` (benchmarks/artifacts/) so later PRs have a
+perf trajectory to compare against.
+
+Run:  PYTHONPATH=src python -m benchmarks.store_scale [--sizes 1000,10000]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks import common as C
+from repro.core.store import EmbeddingStore
+
+EMBED_DIM = 256
+INSERT_CHUNK = 8192
+PER_ITEM_CAP = 10_000   # per-item baseline is O(N) device calls; cap + scale
+N_QUERY = 8
+QUERY_REPS = 3
+
+
+def _bench_insert(embs: np.ndarray) -> dict:
+    n = len(embs)
+    # warm the jit caches (quantize compile is shape-specific, incl. the
+    # final ragged chunk) so both paths are measured at steady state
+    warm = EmbeddingStore(EMBED_DIM, capacity=64)
+    for i in range(0, n, INSERT_CHUNK):
+        chunk = embs[i:i + INSERT_CHUNK]
+        warm.add_batch(np.arange(len(chunk)), chunk,
+                       np.zeros(len(chunk)), np.ones(len(chunk)))
+    warm.add(0, embs[0], exit_idx=0, exit_layer=1)
+
+    store = EmbeddingStore(EMBED_DIM, capacity=64)
+    t0 = time.perf_counter()
+    for i in range(0, n, INSERT_CHUNK):
+        chunk = embs[i:i + INSERT_CHUNK]
+        store.add_batch(np.arange(i, i + len(chunk)), chunk,
+                        np.zeros(len(chunk)), np.ones(len(chunk)))
+    t_batch = time.perf_counter() - t0
+
+    m = min(n, PER_ITEM_CAP)
+    seed_store = EmbeddingStore(EMBED_DIM, capacity=64)
+    t0 = time.perf_counter()
+    for i in range(m):
+        seed_store.add(i, embs[i], exit_idx=0, exit_layer=1)
+    t_item = (time.perf_counter() - t0) * (n / m)
+    return {"store": store, "batch_ips": n / t_batch,
+            "per_item_ips": n / t_item,
+            "speedup": t_item / t_batch,
+            "per_item_measured": m}
+
+
+def _bench_query(store: EmbeddingStore, queries: np.ndarray) -> dict:
+    # "pallas" forced explicitly: impl="auto" resolves to the numpy path on
+    # CPU, and the point of this column is the fused kernel's trajectory
+    out = {}
+    uids_by_impl = {}
+    for impl in ("numpy", "pallas"):
+        times = []
+        for _ in range(QUERY_REPS):
+            t0 = time.perf_counter()
+            uids, _scores = store.search_batch(queries, 10, impl=impl)
+            times.append(time.perf_counter() - t0)
+        uids_by_impl[impl] = uids
+        out[f"{impl}_ms"] = float(np.median(times) * 1e3)
+    # per-row SET equality: fp32 matmul differences between BLAS and the jax
+    # kernel can swap near-tied adjacent ranks without being wrong
+    for a, b in zip(uids_by_impl["numpy"], uids_by_impl["pallas"]):
+        assert set(a.tolist()) == set(b.tolist()), \
+            "numpy and fused-kernel paths disagree on top-k uids"
+    return out
+
+
+def main(sizes=(1_000, 10_000, 100_000)):
+    rng = np.random.default_rng(0)
+    queries = rng.standard_normal((N_QUERY, EMBED_DIM)).astype(np.float32)
+    rows, payload = [], []
+    for n in sizes:
+        embs = rng.standard_normal((n, EMBED_DIM)).astype(np.float32)
+        embs /= np.linalg.norm(embs, axis=-1, keepdims=True)
+        ins = _bench_insert(embs)
+        qry = _bench_query(ins["store"], queries)
+        rows.append([f"{n:,}", f"{ins['batch_ips']:,.0f}",
+                     f"{ins['per_item_ips']:,.0f}", f"{ins['speedup']:.1f}x",
+                     f"{qry['numpy_ms']:.1f}", f"{qry['pallas_ms']:.1f}"])
+        payload.append({"n": n, "embed_dim": EMBED_DIM,
+                        "insert_batch_items_per_s": ins["batch_ips"],
+                        "insert_per_item_items_per_s": ins["per_item_ips"],
+                        "insert_speedup": ins["speedup"],
+                        "per_item_measured_on": ins["per_item_measured"],
+                        "query_numpy_ms": qry["numpy_ms"],
+                        "query_fused_ms": qry["pallas_ms"],
+                        "n_queries": N_QUERY, "topk_uids_match": True})
+        print(f"[store_scale] n={n:,}: insert {ins['batch_ips']:,.0f} items/s "
+              f"batched vs {ins['per_item_ips']:,.0f} per-item "
+              f"({ins['speedup']:.1f}x)")
+    C.print_table("store scaling — insert throughput & query latency", rows,
+                  ["items", "batched ins/s", "per-item ins/s", "speedup",
+                   "numpy q ms", "fused q ms"])
+    path = C.save_json("BENCH_store_scale.json", {"rows": payload})
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", default="1000,10000,100000")
+    args = ap.parse_args()
+    main(tuple(int(s) for s in args.sizes.split(",")))

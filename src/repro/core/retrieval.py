@@ -1,23 +1,31 @@
-"""Speculative fine-grained retrieval (paper §3.4).
+"""Speculative fine-grained retrieval (paper §3.4), vectorized.
 
 Three rounds, mirroring speculative decoding's draft→verify split:
   1. *Speculative filtering*: the query is embedded at several granularities
-     (exit depths); each granularity filters its own top-k from the store —
-     this is what fixes the unbalanced-embedding-distribution problem (a
+     (exit depths); all G granularities are stacked into ONE (G, E) batch and
+     pushed through ``store.search_batch`` — a single fused top-k scan of the
+     store (Pallas ``retrieval_topk`` kernel) instead of G dense matmuls.
+     This fixes the unbalanced-embedding-distribution problem (a
      full-capacity query embedding alone under-retrieves shallow-exit items).
-  2. *Global verifying*: candidates are merged; duplicated IDs keep their
-     best score and the next-highest candidates fill the freed slots
-     (== unique-ified merged top-k).
+  2. *Global verifying*: candidates are merged with a vectorized numpy dedup
+     (sort by score, keep first occurrence per uid) — no Python dict loop.
   3. *Fine-grained correcting*: surviving coarse candidates are refined by
-     the live encoder (remaining layers, resumed from the INT4 activation
-     cache) and matched against the fine-grained query embedding. Refined
-     items are permanently upgraded in the store.
+     the live encoder in uid *batches* (one dense continuation per exit
+     group, resumed from the INT4 activation cache) and matched against the
+     fine-grained query embedding. Refined items are permanently upgraded in
+     the store via one ``upgrade_batch`` call.
+
+``refine_fn`` contract: called with an int64 uid array, it returns either a
+mapping {uid: fine_emb} covering the uids it could refine, or a
+(len(uids), E) array. Legacy scalar callables (``refine_fn(uid) -> emb``)
+are still accepted and driven one uid at a time.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+import warnings
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -35,25 +43,97 @@ class RetrievalResult:
 
 
 def speculative_filter(store: EmbeddingStore,
-                       query_embs: Sequence[np.ndarray], k: int
+                       query_embs: Sequence[np.ndarray], k: int, *,
+                       impl: str = "auto"
                        ) -> List[Tuple[np.ndarray, np.ndarray]]:
-    """Round 1: per-granularity top-k. query_embs: list of (E,) vectors."""
-    return [store.search(q, k) for q in query_embs]
+    """Round 1: per-granularity top-k, all granularities in one fused batch.
+    query_embs: list of (E,) vectors."""
+    Q = np.stack([np.asarray(q, np.float32) for q in query_embs])
+    uids, scores = store.search_batch(Q, k, impl=impl)
+    return list(zip(uids, scores))
 
 
 def global_verify(rounds: List[Tuple[np.ndarray, np.ndarray]], k: int
                   ) -> Tuple[np.ndarray, np.ndarray]:
-    """Round 2: merge + dedup keeping the best score per uid, then top-k."""
-    best: Dict[int, float] = {}
-    for uids, scores in rounds:
-        for u, s in zip(uids.tolist(), scores.tolist()):
-            if u not in best or s > best[u]:
-                best[u] = s
-    if not best:
+    """Round 2: merge + dedup keeping the best score per uid, then top-k.
+
+    Vectorized: stable-sort all candidates by descending score, then keep the
+    first (= best-scoring) occurrence of each uid."""
+    if not rounds:
         return np.zeros((0,), np.int64), np.zeros((0,), np.float32)
-    items = sorted(best.items(), key=lambda kv: -kv[1])[:k]
-    us, ss = zip(*items)
-    return np.asarray(us, np.int64), np.asarray(ss, np.float32)
+    u = np.concatenate([np.asarray(r[0], np.int64).ravel() for r in rounds])
+    s = np.concatenate([np.asarray(r[1], np.float32).ravel() for r in rounds])
+    if u.size == 0:
+        return np.zeros((0,), np.int64), np.zeros((0,), np.float32)
+    order = np.argsort(-s, kind="stable")
+    u, s = u[order], s[order]
+    _, first = np.unique(u, return_index=True)  # first hit per uid = best
+    keep = np.sort(first)[:k]                   # ascending = score-descending
+    return u[keep], s[keep]
+
+
+def refine_batch(refine_fn: Callable, uids: np.ndarray
+                 ) -> Dict[int, np.ndarray]:
+    """Normalize the refine_fn contract to {uid: emb}."""
+    uids = np.asarray(uids, np.int64).ravel()
+    if uids.size == 0:
+        return {}
+    try:
+        out = refine_fn(uids)
+    except (TypeError, KeyError, IndexError, ValueError):
+        # legacy scalar-only callable choking on the uid array: drive it per
+        # uid. Warn so a genuinely-batched fn degrading here is visible (its
+        # real bug also resurfaces from the per-uid calls); other exception
+        # types (device errors, OOM) propagate.
+        warnings.warn("refine_fn rejected a uid batch; falling back to "
+                      "per-uid refinement (seed-style contract)",
+                      RuntimeWarning, stacklevel=3)
+        out = None
+    if out is None:
+        res: Dict[int, np.ndarray] = {}
+        for u in uids.tolist():
+            emb = refine_fn(int(u))
+            if emb is not None:
+                res[int(u)] = np.asarray(emb, np.float32)
+        return res
+    if isinstance(out, Mapping):
+        return {int(u): np.asarray(e, np.float32)
+                for u, e in out.items() if e is not None}
+    # array: row i refines uids[i]; reshape guards the single-uid chunk case
+    # where a legacy fn returned a flat (E,) embedding
+    out = np.asarray(out, np.float32).reshape(len(uids), -1)
+    return {int(u): out[i] for i, u in enumerate(uids.tolist())}
+
+
+def _refine_round(store: EmbeddingStore, uids: np.ndarray,
+                  refine_fn: Optional[Callable],
+                  refine_budget: Optional[int], upgrade: bool
+                  ) -> Tuple[np.ndarray, int]:
+    """Round 3 core: batched refinement of the non-fine candidates in rank
+    order until ``refine_budget`` refinements succeed (like the seed's
+    sequential loop, candidates past a failed one are still attempted).
+    Returns the (m, E) fine/fallback embedding matrix and the refine count."""
+    fine_embs = store.get_embeddings(uids)  # pre-upgrade coarse fallbacks
+    if refine_fn is None or uids.size == 0:
+        return fine_embs, 0
+    pending = uids[~store.is_fine(uids)]
+    budget = pending.size if refine_budget is None else min(refine_budget,
+                                                            pending.size)
+    refined: Dict[int, np.ndarray] = {}
+    i = 0
+    while len(refined) < budget and i < pending.size:
+        chunk = pending[i:i + (budget - len(refined))]
+        i += chunk.size
+        refined.update(refine_batch(refine_fn, chunk))
+    if refined:
+        r_uids = np.fromiter(refined.keys(), np.int64, len(refined))
+        r_embs = np.stack([refined[int(u)] for u in r_uids])
+        if upgrade:
+            store.upgrade_batch(r_uids, r_embs)
+        pos = {int(u): j for j, u in enumerate(uids.tolist())}
+        for u, e in zip(r_uids.tolist(), r_embs):
+            fine_embs[pos[u]] = e
+    return fine_embs, len(refined)
 
 
 def speculative_retrieve(
@@ -61,41 +141,22 @@ def speculative_retrieve(
         query_embs: Sequence[np.ndarray],
         fine_query: np.ndarray,
         *, k: int = 10, final_k: int = 10,
-        refine_fn: Optional[Callable[[int], Optional[np.ndarray]]] = None,
+        refine_fn: Optional[Callable] = None,
         refine_budget: Optional[int] = None,
-        upgrade: bool = True) -> RetrievalResult:
-    """Full pipeline. ``refine_fn(uid) -> fine_emb`` runs the live encoder
-    from the cached activations (None => item can't be refined, falls back to
-    its stored coarse embedding). ``refine_budget`` caps refinements (query
-    latency budget, Fig. 15)."""
+        upgrade: bool = True, impl: str = "auto") -> RetrievalResult:
+    """Full pipeline (see module docstring for the ``refine_fn`` contract).
+    ``refine_budget`` caps refinements (query latency budget, Fig. 15)."""
     t0 = time.perf_counter()
-    rounds = speculative_filter(store, query_embs, k)
+    rounds = speculative_filter(store, query_embs, k, impl=impl)
     t1 = time.perf_counter()
     uids, _ = global_verify(rounds, k)
     t2 = time.perf_counter()
-
-    dense = store.dense_matrix()
-    uid_to_idx = {e.uid: i for i, e in enumerate(store.entries)}
-    fine_embs = []
-    n_ref = 0
-    for u in uids.tolist():
-        entry = store.entries[uid_to_idx[u]]
-        emb = None
-        if (not entry.fine and refine_fn is not None
-                and (refine_budget is None or n_ref < refine_budget)):
-            emb = refine_fn(u)
-            if emb is not None:
-                n_ref += 1
-                if upgrade:
-                    store.upgrade(u, emb)
-        if emb is None:
-            emb = dense[uid_to_idx[u]]
-        fine_embs.append(np.asarray(emb, np.float32))
+    fine_embs, n_ref = _refine_round(store, uids, refine_fn, refine_budget,
+                                     upgrade)
     t3 = time.perf_counter()
 
-    if fine_embs:
-        F = np.stack(fine_embs)
-        scores = F @ np.asarray(fine_query, np.float32)
+    if len(fine_embs):
+        scores = fine_embs @ np.asarray(fine_query, np.float32)
         order = np.argsort(-scores)[:final_k]
         uids_f, scores_f = uids[order], scores[order]
     else:

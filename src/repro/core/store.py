@@ -1,10 +1,32 @@
-"""Embedding store: coarse embeddings + exit metadata + INT4 activation cache.
+"""Slab-backed embedding store: coarse embeddings + exit metadata + INT4
+activation cache.
 
-Host-side (numpy) component of the serving runtime — the analogue of the
-paper's on-flash store. Embeddings are held INT4-packed (paper §5.4: ~5KB per
-1024-d item at INT4 + overhead); a dequantized fp32 matrix is cached for
-matmul search and invalidated on mutation. Queried items are permanently
-upgraded to fine-grained embeddings (§5.3 "web cookie" rule).
+Host-side component of the serving runtime — the analogue of the paper's
+on-flash store (§5.4: ~5KB per 1024-d item at INT4 + overhead). Unlike the
+seed's list-of-rows design, embeddings live in contiguous growable slabs:
+
+  * ``_packed``  (cap, E//2) int8  — two INT4 nibbles per byte (or (cap, E)
+    fp32 when ``store_int4=False``),
+  * ``_scales``  (cap, 1)   fp32   — per-row absmax scales,
+  * ``_meta``    (cap,) structured — uid / exit_idx / exit_layer / modality /
+    fine, vectorized-queryable without touching Python objects,
+  * ``_dense``   (cap, E)  fp32    — incrementally-maintained dequantized
+    search matrix: only rows marked dirty by an insert/upgrade are
+    re-dequantized (one jnp call per refresh), never the whole store.
+
+Capacity grows by amortized doubling; a uid→row hash index replaces the
+seed's O(N) scan. ``add_batch``/``upgrade_batch`` quantize whole batches in a
+single jnp call instead of one device round-trip per item. Reads snapshot
+(row data, uid index) pairs under the same lock as mutations, closing the
+seed's torn row/metadata races; the search scan itself runs outside the lock
+so queries don't serialize inserts (see ``_search_snapshot``).
+
+``search_batch`` is the serving hot path: on accelerators it dispatches a
+(Q, E) query batch to the fused Pallas ``retrieval_topk`` kernel so the full
+(Q, N) score matrix never materializes; on CPU (where the kernel only runs
+in interpret mode) ``impl='auto'`` cuts over to the numpy matmul path.
+Queried items are permanently upgraded to fine-grained embeddings (§5.3
+"web cookie" rule) via ``upgrade``/``upgrade_batch``.
 """
 from __future__ import annotations
 
@@ -14,13 +36,19 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.quantize import dequantize_int4, quantize_int4
 
+_META_DTYPE = np.dtype([("uid", np.int64), ("exit_idx", np.int32),
+                        ("exit_layer", np.int32), ("fine", np.bool_),
+                        ("modality_id", np.int32)])  # index into _modalities
+
 
 @dataclasses.dataclass
 class StoreEntry:
+    """Back-compat row view (materialized on demand from the meta slab)."""
     uid: int
     exit_idx: int          # index into the exit list (not layer number)
     exit_layer: int        # layer depth of the coarse embedding
@@ -29,117 +57,345 @@ class StoreEntry:
 
 
 class EmbeddingStore:
-    def __init__(self, embed_dim: int, store_int4: bool = True):
+    def __init__(self, embed_dim: int, store_int4: bool = True,
+                 capacity: int = 64):
+        if store_int4:  # nibble packing needs an even dim; fp32 mode doesn't
+            assert embed_dim % 2 == 0, embed_dim
         self.embed_dim = embed_dim
         self.store_int4 = store_int4
-        self.entries: List[StoreEntry] = []
-        self._packed: List[np.ndarray] = []   # (E//2,) int8 each (or fp32 row)
-        self._scales: List[np.ndarray] = []
+        self._row_width = embed_dim // 2 if store_int4 else embed_dim
+        self._row_dtype = np.int8 if store_int4 else np.float32
+        self._cap = max(int(capacity), 1)
+        self._n = 0
+        self._packed = np.zeros((self._cap, self._row_width), self._row_dtype)
+        self._scales = np.ones((self._cap, 1), np.float32)
+        self._meta = np.zeros(self._cap, _META_DTYPE)
+        self._dense = np.zeros((self._cap, embed_dim), np.float32)
+        self._dirty = np.zeros(self._cap, np.bool_)
+        self._any_dirty = False
+        self._escaped_n = 0  # rows visible to views handed out to readers
+        self._uid_to_row: Dict[int, int] = {}
+        self._modalities: List[str] = [""]  # interned names; id 0 = unset
+        # (packed, scale, shape, exit_layer) per uid; packed is (S, d//2) int8
         self._act_cache: Dict[int, Tuple[np.ndarray, np.ndarray, Tuple[int, ...], int]] = {}
-        self._dense: Optional[np.ndarray] = None
-        self._lock = threading.Lock()
+        self._lock = threading.RLock()
+
+    def _modality_id_locked(self, name: str) -> int:
+        try:
+            return self._modalities.index(name)
+        except ValueError:
+            self._modalities.append(name)
+            return len(self._modalities) - 1
+
+    # -- capacity ------------------------------------------------------------
+
+    def _ensure_capacity(self, n_needed: int) -> None:
+        if n_needed <= self._cap:
+            return
+        cap = self._cap
+        while cap < n_needed:
+            cap *= 2
+        for name in ("_packed", "_scales", "_meta", "_dense", "_dirty"):
+            old = getattr(self, name)
+            new = np.zeros((cap,) + old.shape[1:], old.dtype)
+            new[:self._n] = old[:self._n]
+            setattr(self, name, new)
+        self._cap = cap
+        self._escaped_n = 0  # the fresh dense buffer has no outside readers
+
+    def _quantize_rows(self, embs: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """(B, E) fp32 -> (packed rows, scales) in ONE device call."""
+        if self.store_int4:
+            p, s = quantize_int4(jnp.asarray(embs))
+            return np.asarray(p), np.asarray(s)
+        return embs, np.ones((len(embs), 1), np.float32)
 
     # -- mutation ------------------------------------------------------------
 
     def add(self, uid: int, emb: np.ndarray, *, exit_idx: int, exit_layer: int,
             modality: str = "", fine: bool = False,
             cached_h: Optional[np.ndarray] = None) -> None:
-        emb = np.asarray(emb, np.float32)
-        with self._lock:
-            if self.store_int4:
-                p, s = quantize_int4(jnp.asarray(emb))
-                self._packed.append(np.asarray(p))
-                self._scales.append(np.asarray(s))
-            else:
-                self._packed.append(emb)
-                self._scales.append(np.ones((1,), np.float32))
-            self.entries.append(StoreEntry(uid, exit_idx, exit_layer, modality, fine))
-            if cached_h is not None:
-                ch = jnp.asarray(cached_h, jnp.float32)
-                shape = tuple(ch.shape)
-                flat = ch.reshape(-1, shape[-1])
-                p, s = quantize_int4(flat)
-                self._act_cache[uid] = (np.asarray(p), np.asarray(s), shape, exit_layer)
-            self._dense = None
+        self.add_batch([uid], np.asarray(emb, np.float32)[None],
+                       [exit_idx], [exit_layer], modality=modality, fine=fine,
+                       cached_hs=None if cached_h is None
+                       else np.asarray(cached_h, np.float32)[None])
 
     def add_batch(self, uids, embs, exit_idxs, exit_layers, *, modality="",
-                  cached_hs=None) -> None:
-        for i, uid in enumerate(uids):
-            self.add(int(uid), np.asarray(embs[i]), exit_idx=int(exit_idxs[i]),
-                     exit_layer=int(exit_layers[i]), modality=modality,
-                     cached_h=None if cached_hs is None else np.asarray(cached_hs[i]))
+                  fine: bool = False, cached_hs=None) -> None:
+        """Vectorized insert: one quantize call for the embedding batch and
+        (optionally) one for the whole activation batch. Re-adding an
+        existing uid overwrites its row in place (last write wins) instead of
+        leaving a ghost duplicate in the slab."""
+        uids = np.asarray(uids, np.int64).ravel()
+        embs = np.asarray(embs, np.float32).reshape(len(uids), self.embed_dim)
+        packed, scales = self._quantize_rows(embs)
+        act = None
+        if cached_hs is not None:
+            ch = np.asarray(cached_hs, np.float32)  # (B, ..., d)
+            p, s = quantize_int4(jnp.asarray(ch))
+            act = (np.asarray(p), np.asarray(s), tuple(ch.shape[1:]))
+        exit_idxs = np.asarray(exit_idxs, np.int32).ravel()
+        exit_layers = np.asarray(exit_layers, np.int32).ravel()
+        with self._lock:
+            mod_id = self._modality_id_locked(modality)
+            rows = np.empty(len(uids), np.int64)
+            nxt = self._n
+            for j, u in enumerate(uids.tolist()):
+                row = self._uid_to_row.get(u)
+                if row is None:
+                    row = nxt
+                    nxt += 1
+                    self._uid_to_row[u] = row
+                elif act is None:
+                    # re-add without fresh activations: evict the previous
+                    # content's cache so refinement can't resume from it
+                    self._act_cache.pop(u, None)
+                rows[j] = row
+            self._ensure_capacity(nxt)
+            self._packed[rows] = packed
+            self._scales[rows] = scales
+            self._meta["uid"][rows] = uids
+            self._meta["exit_idx"][rows] = exit_idxs
+            self._meta["exit_layer"][rows] = exit_layers
+            self._meta["modality_id"][rows] = mod_id
+            self._meta["fine"][rows] = fine
+            self._dirty[rows] = True
+            self._any_dirty = True
+            if act is not None:
+                ap, ascale, shape = act
+                for j, u in enumerate(uids.tolist()):
+                    self._act_cache[u] = (ap[j], ascale[j], shape,
+                                          int(exit_layers[j]))
+            self._n = nxt
 
     def upgrade(self, uid: int, fine_emb: np.ndarray) -> None:
         """Permanently replace a coarse embedding with its refined version."""
+        self.upgrade_batch([uid], np.asarray(fine_emb, np.float32)[None])
+
+    def upgrade_batch(self, uids: Sequence[int], fine_embs: np.ndarray) -> None:
+        """Vectorized §5.3 upgrade: requantize the whole batch in one call,
+        mark only the touched rows dirty, free their activation cache."""
+        uids = np.asarray(uids, np.int64).ravel()
+        if uids.size == 0:
+            return
+        embs = np.asarray(fine_embs, np.float32).reshape(len(uids),
+                                                         self.embed_dim)
+        packed, scales = self._quantize_rows(embs)
         with self._lock:
-            i = self._index_of(uid)
-            emb = np.asarray(fine_emb, np.float32)
-            if self.store_int4:
-                p, s = quantize_int4(jnp.asarray(emb))
-                self._packed[i], self._scales[i] = np.asarray(p), np.asarray(s)
-            else:
-                self._packed[i] = emb
-            self.entries[i].fine = True
-            self._act_cache.pop(uid, None)  # §3.4: storage freed once refined
-            self._dense = None
+            rows = self._rows_of_locked(uids)
+            self._packed[rows] = packed
+            self._scales[rows] = scales
+            self._meta["fine"][rows] = True
+            self._dirty[rows] = True
+            self._any_dirty = True
+            for u in uids.tolist():
+                self._act_cache.pop(u, None)  # §3.4: storage freed once refined
+
+    # -- index ---------------------------------------------------------------
+
+    def _rows_of_locked(self, uids: np.ndarray) -> np.ndarray:
+        try:
+            return np.fromiter((self._uid_to_row[int(u)] for u in uids),
+                               np.int64, len(uids))
+        except KeyError as e:
+            raise KeyError(f"uid {e.args[0]} not in store") from None
+
+    def rows_of(self, uids) -> np.ndarray:
+        with self._lock:
+            return self._rows_of_locked(np.asarray(uids, np.int64).ravel())
+
+    def row_of(self, uid: int) -> int:
+        with self._lock:
+            return self._uid_to_row[int(uid)]
+
+    # seed-compat alias (the O(N) scan is gone; this is the hash index)
+    def _index_of(self, uid: int) -> int:
+        try:
+            return self.row_of(uid)
+        except KeyError:
+            raise KeyError(uid)
+
+    def __len__(self) -> int:
+        return self._n
+
+    def uids(self) -> np.ndarray:
+        with self._lock:
+            return self._meta["uid"][:self._n].copy()
+
+    def is_fine(self, uids) -> np.ndarray:
+        with self._lock:
+            return self._meta["fine"][self._rows_of_locked(
+                np.asarray(uids, np.int64).ravel())].copy()
+
+    @property
+    def n_fine(self) -> int:
+        with self._lock:
+            return int(self._meta["fine"][:self._n].sum())
+
+    @property
+    def entries(self) -> List[StoreEntry]:
+        """Back-compat materialized row views (O(N); prefer the vectorized
+        accessors — mutating the returned objects does NOT write back)."""
+        with self._lock:
+            m = self._meta[:self._n]
+            return [StoreEntry(int(r["uid"]), int(r["exit_idx"]),
+                               int(r["exit_layer"]),
+                               self._modalities[int(r["modality_id"])],
+                               bool(r["fine"])) for r in m]
 
     # -- access --------------------------------------------------------------
 
-    def _index_of(self, uid: int) -> int:
-        for i, e in enumerate(self.entries):
-            if e.uid == uid:
-                return i
-        raise KeyError(uid)
-
-    def __len__(self) -> int:
-        return len(self.entries)
+    def _refresh_dense_locked(self) -> None:
+        """Dequantize only rows touched since the last refresh. If a view of
+        the buffer escaped to a reader and an upgrade dirtied one of its rows,
+        copy-on-write first so in-flight scans keep an internally consistent
+        (stale-but-whole) snapshot instead of seeing torn rows."""
+        if not self._any_dirty:
+            return
+        rows = np.nonzero(self._dirty[:self._n])[0]
+        if rows.size:
+            if self._escaped_n and (rows < self._escaped_n).any():
+                self._dense = self._dense.copy()
+                self._escaped_n = 0
+            if self.store_int4:
+                self._dense[rows] = np.asarray(dequantize_int4(
+                    jnp.asarray(self._packed[rows]),
+                    jnp.asarray(self._scales[rows])))
+            else:
+                self._dense[rows] = self._packed[rows]
+        self._dirty[:self._n] = False
+        self._any_dirty = False
 
     def dense_matrix(self) -> np.ndarray:
-        """(N, E) fp32 search matrix (lazy dequant cache)."""
+        """(N, E) fp32 search matrix (incrementally-maintained cache).
+
+        Returns a read-only snapshot view: later mutations land in a fresh or
+        copied-on-write buffer, so the returned array stays internally
+        consistent but goes stale. Use ``search`` / ``search_batch`` /
+        ``get_embeddings`` for queries."""
         with self._lock:
-            if self._dense is None:
-                if not self.entries:
-                    self._dense = np.zeros((0, self.embed_dim), np.float32)
-                elif self.store_int4:
-                    packed = np.stack(self._packed)
-                    scales = np.stack(self._scales)
-                    self._dense = np.asarray(
-                        dequantize_int4(jnp.asarray(packed), jnp.asarray(scales)))
-                else:
-                    self._dense = np.stack(self._packed)
-            return self._dense
+            self._refresh_dense_locked()
+            self._escaped_n = max(self._escaped_n, self._n)
+            v = self._dense[:self._n]
+            v.setflags(write=False)
+            return v
+
+    def get_embeddings(self, uids) -> np.ndarray:
+        """(len(uids), E) fp32 dequantized rows — a lock-consistent copy."""
+        uids = np.asarray(uids, np.int64).ravel()
+        with self._lock:
+            if uids.size == 0:
+                return np.zeros((0, self.embed_dim), np.float32)
+            self._refresh_dense_locked()
+            return self._dense[self._rows_of_locked(uids)].copy()
 
     def cached_activation(self, uid: int) -> Optional[Tuple[np.ndarray, int]]:
         """Dequantized cached hidden state (h, exit_layer) or None."""
-        item = self._act_cache.get(uid)
-        if item is None:
-            return None
-        p, s, shape, exit_layer = item
-        h = np.asarray(dequantize_int4(jnp.asarray(p), jnp.asarray(s)))
-        return h.reshape(shape), exit_layer
+        out = self.cached_activations([uid])
+        return out.get(int(uid))
+
+    def cached_activations(self, uids) -> Dict[int, Tuple[np.ndarray, int]]:
+        """Batched dequant of cached activations: one jnp call per distinct
+        activation shape instead of one per uid. Returns {uid: (h, layer)}."""
+        with self._lock:
+            items = [(int(u), self._act_cache[int(u)]) for u in uids
+                     if int(u) in self._act_cache]
+        by_shape: Dict[Tuple[int, ...], List[Tuple[int, np.ndarray, np.ndarray, int]]] = {}
+        for u, (p, s, shape, layer) in items:
+            by_shape.setdefault(shape, []).append((u, p, s, layer))
+        out: Dict[int, Tuple[np.ndarray, int]] = {}
+        for shape, group in by_shape.items():
+            packed = np.stack([g[1] for g in group])
+            scales = np.stack([g[2] for g in group])
+            hs = np.asarray(dequantize_int4(jnp.asarray(packed),
+                                            jnp.asarray(scales)))
+            for (u, _, _, layer), h in zip(group, hs):
+                out[u] = (h.reshape(shape), layer)
+        return out
+
+    def has_cached(self, uid: int) -> bool:
+        with self._lock:
+            return int(uid) in self._act_cache
+
+    # -- search --------------------------------------------------------------
+
+    def _search_snapshot(self) -> Tuple[np.ndarray, int, np.ndarray]:
+        """(full dense slab, row count, uid copy) taken under the lock. The
+        scan itself runs OUTSIDE the lock so queries don't serialize inserts.
+        The snapshot is consistent for rows < n: growth reallocates into a
+        fresh buffer, and a later upgrade overlapping an escaped view
+        triggers copy-on-write in ``_refresh_dense_locked`` — a concurrent
+        reader sees stale-but-whole rows, never torn ones. (Rows >= n are
+        masked by every consumer, so concurrent appends there are benign.)"""
+        with self._lock:
+            self._refresh_dense_locked()
+            self._escaped_n = max(self._escaped_n, self._n)
+            return (self._dense, self._n,
+                    self._meta["uid"][:self._n].copy())
 
     def search(self, query: np.ndarray, k: int) -> Tuple[np.ndarray, np.ndarray]:
-        """Top-k by inner product: returns (uids (k,), scores (k,))."""
-        M = self.dense_matrix()
-        if len(M) == 0:
+        """Top-k by inner product (numpy reference path): (uids, scores)."""
+        q = np.asarray(query, np.float32)
+        if self._n == 0:
             return np.zeros((0,), np.int64), np.zeros((0,), np.float32)
-        scores = M @ np.asarray(query, np.float32)
-        k = min(k, len(M))
+        slab, n, uids = self._search_snapshot()
+        scores = slab[:n] @ q
+        k = min(k, n)
         idx = np.argpartition(-scores, k - 1)[:k]
         idx = idx[np.argsort(-scores[idx])]
-        uids = np.array([self.entries[i].uid for i in idx])
-        return uids, scores[idx]
+        return uids[idx], scores[idx]
+
+    def search_batch(self, queries: np.ndarray, k: int, *, impl: str = "auto",
+                     **kw) -> Tuple[np.ndarray, np.ndarray]:
+        """Fused batched top-k over the whole store: queries (Q, E) ->
+        (uids (Q, k), scores (Q, k)), both sorted by descending score.
+
+        ``impl='auto'`` picks the compiled Pallas ``retrieval_topk`` kernel
+        on accelerators and the numpy matmul+argpartition host path on CPU
+        (where the kernel only runs in interpret mode, ~10x slower — see
+        BENCH_store_scale.json). ``impl='pallas'``/``'xla'``/``'numpy'``
+        force a backend. Scores are raw inner products (normalize=False) to
+        match ``search``."""
+        queries = np.asarray(queries, np.float32).reshape(-1, self.embed_dim)
+        nq = len(queries)
+        if self._n == 0 or nq == 0:
+            return (np.zeros((nq, 0), np.int64),
+                    np.zeros((nq, 0), np.float32))
+        if impl == "auto" and jax.default_backend() == "cpu":
+            impl = "numpy"  # interpret-mode kernel loses to the host matmul
+        slab, n, uids = self._search_snapshot()
+        k = min(k, n)
+        if impl == "numpy":
+            scores = queries @ slab[:n].T                       # (Q, N)
+            idx = np.argpartition(-scores, k - 1, axis=1)[:, :k]
+            part = np.take_along_axis(scores, idx, axis=1)
+            order = np.argsort(-part, axis=1)
+            idx = np.take_along_axis(idx, order, axis=1)
+            top_s = np.take_along_axis(part, order, axis=1)
+        else:
+            from repro.kernels.retrieval_topk.ops import retrieval_topk
+            # hand the kernel the whole capacity slab + a runtime row count:
+            # the traced bank shape then changes only on slab doublings
+            # (O(log N) compiles), not once per store size
+            s, i = retrieval_topk(jnp.asarray(queries), jnp.asarray(slab),
+                                  k, normalize=False, impl=impl, n_valid=n,
+                                  **kw)
+            idx = np.asarray(i, np.int64)
+            top_s = np.asarray(s, np.float32)
+        return uids[idx], top_s
 
     # -- accounting ----------------------------------------------------------
 
     def storage_bytes(self) -> Dict[str, int]:
-        emb = sum(p.nbytes + s.nbytes for p, s in zip(self._packed, self._scales))
-        act = sum(p.nbytes + s.nbytes for p, s, _, _ in self._act_cache.values())
-        return {"embeddings": emb, "act_cache": act, "total": emb + act,
-                "per_item": (emb // max(len(self.entries), 1))}
+        with self._lock:
+            emb = int(self._packed[:self._n].nbytes +
+                      self._scales[:self._n].nbytes)
+            act = sum(p.nbytes + s.nbytes
+                      for p, s, _, _ in self._act_cache.values())
+            return {"embeddings": emb, "act_cache": act, "total": emb + act,
+                    "per_item": emb // max(self._n, 1)}
 
     def exit_histogram(self, n_exits: int) -> np.ndarray:
-        h = np.zeros(n_exits, np.int64)
-        for e in self.entries:
-            h[e.exit_idx] += 1
-        return h
+        with self._lock:
+            return np.bincount(self._meta["exit_idx"][:self._n],
+                               minlength=n_exits).astype(np.int64)[:n_exits]

@@ -10,7 +10,7 @@ for a single query batch.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,8 +26,8 @@ except Exception:  # pragma: no cover
 NEG_INF = -1e30
 
 
-def _topk_kernel(q_ref, b_ref, s_out, i_out, best_s, best_i, *, k: int,
-                 block_n: int, nn: int, n_real: int, normalize: bool):
+def _topk_kernel(n_ref, q_ref, b_ref, s_out, i_out, best_s, best_i, *,
+                 k: int, block_n: int, nn: int, normalize: bool):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -43,7 +43,9 @@ def _topk_kernel(q_ref, b_ref, s_out, i_out, best_s, best_i, *, k: int,
     s = jax.lax.dot_general(q, b, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)  # (bq, bn)
     ids = j * block_n + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    s = jnp.where(ids < n_real, s, NEG_INF)
+    # n_ref is a runtime scalar (SMEM), so the same compiled kernel serves
+    # any fill level of a fixed-capacity bank slab
+    s = jnp.where(ids < n_ref[0], s, NEG_INF)
 
     cat_s = jnp.concatenate([best_s[...], s], axis=1)           # (bq, k+bn)
     cat_i = jnp.concatenate([best_i[...], ids], axis=1)
@@ -60,8 +62,15 @@ def _topk_kernel(q_ref, b_ref, s_out, i_out, best_s, best_i, *, k: int,
 
 def retrieval_topk_pallas(query: jax.Array, bank: jax.Array, k: int, *,
                           normalize: bool = True, block_q: int = 128,
-                          block_n: int = 1024, interpret: bool = True
-                          ) -> Tuple[jax.Array, jax.Array]:
+                          block_n: int = 1024,
+                          interpret: Optional[bool] = None,
+                          n_valid=None) -> Tuple[jax.Array, jax.Array]:
+    """``n_valid`` (int or traced int scalar, default = all of ``bank``)
+    masks rows past the fill level of a fixed-capacity bank slab: passing the
+    whole slab + a runtime count keeps the traced shapes stable between slab
+    doublings, so serving inserts don't force a recompile per store size."""
+    if interpret is None:  # compiled path only where Mosaic can lower it
+        interpret = jax.default_backend() != "tpu"
     Q, E = query.shape
     N = bank.shape[0]
     bq = min(block_q, Q)
@@ -74,12 +83,15 @@ def retrieval_topk_pallas(query: jax.Array, bank: jax.Array, k: int, *,
         bank = jnp.pad(bank, ((0, padn), (0, 0)))
     nq = query.shape[0] // bq
     nn = bank.shape[0] // bn
+    n_arr = jnp.full((1,), N if n_valid is None else n_valid, jnp.int32)
     kernel = functools.partial(_topk_kernel, k=k, block_n=bn, nn=nn,
-                               n_real=N, normalize=normalize)
+                               normalize=normalize)
     scores, ids = pl.pallas_call(
         kernel,
         grid=(nq, nn),
-        in_specs=[pl.BlockSpec((bq, E), lambda i, j: (i, 0)),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM) if pltpu is not None
+                  else pl.BlockSpec((1,), lambda i, j: (0,)),
+                  pl.BlockSpec((bq, E), lambda i, j: (i, 0)),
                   pl.BlockSpec((bn, E), lambda i, j: (j, 0))],
         out_specs=[pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
                    pl.BlockSpec((bq, k), lambda i, j: (i, 0))],
@@ -88,5 +100,5 @@ def retrieval_topk_pallas(query: jax.Array, bank: jax.Array, k: int, *,
         scratch_shapes=[_VMEM((bq, k), jnp.float32),
                         _VMEM((bq, k), jnp.int32)],
         interpret=interpret,
-    )(query, bank)
+    )(n_arr, query, bank)
     return scores[:Q], ids[:Q]

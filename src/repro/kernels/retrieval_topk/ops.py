@@ -1,17 +1,84 @@
-"""Dispatch wrapper for fused retrieval top-k."""
+"""Dispatch wrapper for fused retrieval top-k.
+
+``impl`` selects the backend:
+  * ``"auto"`` (default) — Pallas kernel when importable (interpret mode on
+    CPU, compiled on TPU), else the jnp/XLA reference.
+  * ``"pallas"`` — force the Pallas kernel; ``interpret=None`` auto-detects
+    (interpret off only on TPU).
+  * ``"xla"`` — force the jnp reference (normalize → matmul → lax.top_k).
+"""
 from __future__ import annotations
 
-from typing import Tuple
+import functools
+from typing import Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 
-from repro.kernels.retrieval_topk.kernel import retrieval_topk_pallas
 from repro.kernels.retrieval_topk.ref import retrieval_topk_reference
+
+try:
+    from repro.kernels.retrieval_topk import kernel as _kernel
+    retrieval_topk_pallas = _kernel.retrieval_topk_pallas
+    # kernel.py imports with _VMEM=None when pallas.tpu is missing; the
+    # pallas_call scratch_shapes would then crash, so treat it as absent
+    _HAS_PALLAS = _kernel._VMEM is not None
+except Exception:  # pragma: no cover — pallas not in this jax build
+    retrieval_topk_pallas = None
+    _HAS_PALLAS = False
+
+
+def default_impl() -> str:
+    if not _HAS_PALLAS:
+        return "xla"
+    backend = jax.default_backend()
+    if backend == "tpu":
+        return "pallas"          # compiled Mosaic kernel
+    if backend == "cpu":
+        return "pallas"          # interpret mode (correctness/testing path)
+    return "xla"  # GPU: the TPU kernel can't compile there and interpret
+    #               mode would crawl — the compiled reference wins
+
+
+@functools.lru_cache(maxsize=128)
+def _jitted(impl: str, k: int, normalize: bool, kw: tuple):
+    """Per-(impl, k, flags) jitted entry point. jax.jit's own cache then
+    specializes per input shape; the valid-row count rides along as a traced
+    scalar, so a fixed-capacity bank slab reuses one compilation across any
+    fill level."""
+    if impl == "pallas":
+        def fn(query, bank, n_valid):
+            return retrieval_topk_pallas(query, bank, k, normalize=normalize,
+                                         n_valid=n_valid, **dict(kw))
+    else:
+        def fn(query, bank, n_valid):
+            return retrieval_topk_reference(query, bank, k,
+                                            normalize=normalize,
+                                            n_valid=n_valid)
+    return jax.jit(fn)
 
 
 def retrieval_topk(query: jax.Array, bank: jax.Array, k: int, *,
-                   normalize: bool = True, impl: str = "xla",
+                   normalize: bool = True, impl: str = "auto",
+                   interpret: Optional[bool] = None, n_valid: Optional[int] = None,
                    **kw) -> Tuple[jax.Array, jax.Array]:
+    """``n_valid`` restricts the scan to the first n_valid bank rows (for
+    capacity-padded slabs); defaults to the whole bank."""
+    if impl in (None, "auto"):
+        impl = default_impl()
     if impl == "pallas":
-        return retrieval_topk_pallas(query, bank, k, normalize=normalize, **kw)
-    return retrieval_topk_reference(query, bank, k, normalize=normalize)
+        if not _HAS_PALLAS:
+            raise RuntimeError("retrieval_topk impl='pallas' requested but "
+                               "the Pallas kernel is unavailable in this jax "
+                               "build; use impl='auto' or 'xla'")
+        if interpret is None:  # resolve here so the jit cache key is concrete
+            interpret = jax.default_backend() != "tpu"
+        kw = dict(kw, interpret=interpret)
+    elif impl != "xla":
+        raise ValueError(f"unknown retrieval_topk impl: {impl!r}")
+    # both backends take the valid-row count as a traced scalar so a
+    # capacity-padded bank reuses one compilation across fill levels
+    n_arr = jnp.asarray(bank.shape[0] if n_valid is None else n_valid,
+                        jnp.int32)
+    return _jitted(impl, k, normalize,
+                   tuple(sorted(kw.items())))(query, bank, n_arr)

@@ -8,14 +8,21 @@ import jax.numpy as jnp
 
 
 def retrieval_topk_reference(query: jax.Array, bank: jax.Array, k: int, *,
-                             normalize: bool = True
+                             normalize: bool = True, n_valid=None
                              ) -> Tuple[jax.Array, jax.Array]:
-    """query (Q,E); bank (N,E) -> (scores (Q,k), ids (Q,k))."""
+    """query (Q,E); bank (N,E) -> (scores (Q,k), ids (Q,k)).
+
+    ``n_valid`` (int or traced scalar) masks bank rows past the fill level of
+    a capacity-padded slab, keeping the traced shape stable across fills
+    (requires k <= n_valid)."""
     q = query.astype(jnp.float32)
     b = bank.astype(jnp.float32)
     if normalize:
         q = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-8)
         b = b / jnp.maximum(jnp.linalg.norm(b, axis=-1, keepdims=True), 1e-8)
     sims = q @ b.T
+    if n_valid is not None:
+        live = jnp.arange(bank.shape[0])[None, :] < n_valid
+        sims = jnp.where(live, sims, -1e30)
     scores, ids = jax.lax.top_k(sims, k)
     return scores, ids.astype(jnp.int32)

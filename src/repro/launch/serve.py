@@ -1,5 +1,9 @@
 """Serving driver: embedding runtime + query runtime, end-to-end.
 
+Queries are served through ``QueryEngine.query_batch`` (one tower pass +
+one fused store scan for the whole query drain); ``--per-query`` falls back
+to the sequential seed-style loop.
+
 Smoke-scale on CPU:
   PYTHONPATH=src python -m repro.launch.serve --smoke --n-items 128 --n-queries 16
 """
@@ -64,6 +68,9 @@ def main():
     ap.add_argument("--n-queries", type=int, default=16)
     ap.add_argument("--policy", default="recall",
                     choices=["recall", "branchynet", "fixed", "full"])
+    ap.add_argument("--per-query", action="store_true",
+                    help="serve queries one at a time instead of one "
+                         "query_batch drain")
     args = ap.parse_args()
 
     spec = get_arch(args.arch)
@@ -81,11 +88,21 @@ def main():
           f"{stats.n_embedded / stats.wall_s:.1f} items/s (host wall)")
     print(f"store: {engine.store.storage_bytes()}")
 
-    hits = 0
-    for qi in range(args.n_queries):
-        res = query.query(data.items["text"][qi], k=10)
-        hits += int(len(res.uids) > 0 and res.uids[0] == qi)
-    print(f"R@1 (untrained model, sanity only): {hits / args.n_queries:.2f}")
+    nq = min(args.n_queries, len(data.items["text"]))
+    t0 = time.perf_counter()
+    if args.per_query:
+        results = [query.query(data.items["text"][qi], k=10)
+                   for qi in range(nq)]
+    else:
+        results = query.query_batch(data.items["text"][:nq], k=10)
+    dt = time.perf_counter() - t0
+    hits = sum(int(len(r.uids) > 0 and r.uids[0] == qi)
+               for qi, r in enumerate(results))
+    mode = "per-query" if args.per_query else "batched"
+    print(f"{nq} {mode} queries in {dt:.2f}s "
+          f"({dt / nq * 1e3:.0f} ms/query host), "
+          f"{sum(r.n_refined for r in results)} refinements")
+    print(f"R@1 (untrained model, sanity only): {hits / nq:.2f}")
 
 
 if __name__ == "__main__":

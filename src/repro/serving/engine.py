@@ -191,15 +191,37 @@ class EmbeddingEngine:
 
     # -- refinement hook for the query runtime -----------------------------------
 
-    def refine_fn(self) -> Callable[[int], Optional[np.ndarray]]:
-        def refine(uid: int) -> Optional[np.ndarray]:
-            cached = self.store.cached_activation(uid)
-            if cached is None:
-                return None
-            h, _exit_layer = cached
-            # cached tensor is the superficial hidden state: resume there
-            start = self.recall.superficial_layers
-            fn = self._continue_fn(start, self.tower.n_layers)
-            emb = fn(jnp.asarray(h[None]))
-            return np.asarray(emb)[0]
+    def refine_fn(self) -> Callable:
+        """Batched refinement hook for speculative retrieval round 3.
+
+        Called with a uid array it returns ``{uid: fine_emb}`` for every uid
+        with a cached activation, running ONE dense continuation per
+        activation-shape group (chunked at ``max_batch``) instead of a B=1
+        jit call per uid. Called with a scalar uid it returns the embedding
+        or None (seed-compatible)."""
+        start = self.recall.superficial_layers
+        end = self.tower.n_layers
+
+        def refine(uids):
+            scalar = np.isscalar(uids) or isinstance(uids, (int, np.integer))
+            uid_list = ([int(uids)] if scalar
+                        else [int(u) for u in np.asarray(uids).ravel()])
+            cached = self.store.cached_activations(uid_list)
+            # cached tensors are superficial hidden states: resume from layer
+            # N. Group by shape (one group per modality/sequence length).
+            groups: Dict[Tuple[int, ...], List[int]] = {}
+            for u in uid_list:
+                if u in cached:
+                    groups.setdefault(tuple(cached[u][0].shape), []).append(u)
+            out: Dict[int, np.ndarray] = {}
+            fn = self._continue_fn(start, end)
+            for us in groups.values():
+                for i in range(0, len(us), self.max_batch):
+                    chunk = us[i:i + self.max_batch]
+                    h = np.stack([cached[u][0] for u in chunk])
+                    embs = np.asarray(fn(jnp.asarray(h)))
+                    out.update(zip(chunk, embs))
+            if scalar:
+                return out.get(int(uids))
+            return out
         return refine

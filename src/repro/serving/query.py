@@ -5,6 +5,17 @@ tower), speculatively filters the store per granularity, verifies globally,
 then refines surviving coarse candidates with the live encoder under an
 optional latency budget. Repeated queries hit permanently-upgraded
 embeddings (§5.3) and skip refinement entirely.
+
+Two entry points:
+  * ``query``       — one query, full seed-compatible semantics (refinement
+    budget counts *successes*, retrying past failed candidates).
+  * ``query_batch`` — many users per drain: ONE ``mem_embed_all_exits`` tower
+    pass for the whole batch, one fused ``store.search_batch`` call over all
+    B×G (query, granularity) pairs, a single deduplicated refinement batch
+    shared across queries, and one store ``upgrade_batch``. A candidate
+    pending for several queries is refined once and counted for each; the
+    per-query budget caps *attempted* candidates (rank order), a slight
+    simplification of the sequential retry semantics.
 """
 from __future__ import annotations
 
@@ -17,24 +28,26 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import MEMConfig, RecallConfig
-from repro.core.retrieval import (RetrievalResult, single_granularity_retrieve,
+from repro.core.retrieval import (RetrievalResult, refine_batch,
+                                  global_verify, single_granularity_retrieve,
                                   speculative_retrieve)
 from repro.core.store import EmbeddingStore
-from repro.models import imagebind as IB
 
 
 class QueryEngine:
     def __init__(self, params, cfg: MEMConfig, recall: RecallConfig, *,
                  store: EmbeddingStore,
-                 refine_fn: Optional[Callable[[int], Optional[np.ndarray]]] = None,
+                 refine_fn: Optional[Callable] = None,
                  query_modality: str = "text", lora=None,
-                 fw_kw: Optional[dict] = None):
+                 fw_kw: Optional[dict] = None, search_impl: str = "auto"):
+        from repro.models import imagebind as IB
         self.params, self.cfg, self.recall = params, cfg, recall
         self.store = store
         self.refine_fn = refine_fn
         self.modality = query_modality
         self.lora = lora
         self.fw_kw = fw_kw or {}
+        self.search_impl = search_impl
         t = cfg.tower(query_modality)
         exits = recall.exit_layers(t.n_layers)
         k = recall.query_granularities
@@ -45,11 +58,22 @@ class QueryEngine:
             self.params, self.cfg, self.recall, self.modality, x,
             lora=self.lora, **self.fw_kw)["exit_embs"])
         self._exits = exits
+        self._g_rows = [exits.index(g) for g in self.granularities]
+
+    # -- embedding -----------------------------------------------------------
 
     def embed_query(self, query: np.ndarray) -> Dict[int, np.ndarray]:
         """One tower pass gives every granularity (exit taps are free)."""
         embs = np.asarray(self._jit_all_exits(jnp.asarray(query[None])))[:, 0]
         return {e: embs[self._exits.index(e)] for e in self.granularities}
+
+    def embed_query_batch(self, queries: np.ndarray) -> np.ndarray:
+        """(B, ...) query batch -> (B, G, E) granularity embeddings from ONE
+        tower pass (row -1 is the fine/full-depth embedding)."""
+        embs = np.asarray(self._jit_all_exits(jnp.asarray(queries)))
+        return embs[self._g_rows].transpose(1, 0, 2)  # (B, G, E)
+
+    # -- single query --------------------------------------------------------
 
     def query(self, query: np.ndarray, *, k: int = 10, final_k: int = 10,
               refine_budget: Optional[int] = None,
@@ -65,4 +89,94 @@ class QueryEngine:
         return speculative_retrieve(
             self.store, [by_g[g] for g in self.granularities], fine,
             k=k, final_k=final_k, refine_fn=self.refine_fn,
-            refine_budget=refine_budget)
+            refine_budget=refine_budget, impl=self.search_impl)
+
+    # -- batched queries -----------------------------------------------------
+
+    def query_batch(self, queries, *, k: int = 10, final_k: int = 10,
+                    refine_budget: Optional[int] = None,
+                    speculative: bool = True) -> List[RetrievalResult]:
+        """Serve a whole drain of queries at once (see module docstring).
+        Per-result ``latency_s``/``per_round_s`` are the batch wall time
+        amortized over the batch."""
+        queries = np.stack([np.asarray(q) for q in queries])
+        B = len(queries)
+        if B == 0:
+            return []
+        t0 = time.perf_counter()
+        QG = self.embed_query_batch(queries)            # (B, G, E)
+        fine_q = QG[:, -1]                              # (B, E)
+        G = QG.shape[1]
+        if not speculative:
+            uids, scores = self.store.search_batch(fine_q, k,
+                                                   impl=self.search_impl)
+            dt = (time.perf_counter() - t0) / B
+            return [RetrievalResult(uids=uids[b], scores=scores[b],
+                                    filtered_uids=uids[b], n_refined=0,
+                                    latency_s=dt, per_round_s={})
+                    for b in range(B)]
+
+        # round 1: every (query, granularity) pair in ONE fused store scan
+        flat_u, flat_s = self.store.search_batch(
+            QG.reshape(B * G, -1), k, impl=self.search_impl)
+        kk = flat_u.shape[1]
+        u3 = flat_u.reshape(B, G, kk)
+        s3 = flat_s.reshape(B, G, kk)
+        t1 = time.perf_counter()
+
+        # round 2: vectorized dedup per query
+        cands = [global_verify(list(zip(u3[b], s3[b])), k) for b in range(B)]
+        t2 = time.perf_counter()
+
+        # round 3: one deduplicated refinement batch across all queries
+        pending_per_q: List[np.ndarray] = []
+        for uids_b, _ in cands:
+            if self.refine_fn is None or uids_b.size == 0:
+                pending_per_q.append(np.zeros((0,), np.int64))
+                continue
+            p = uids_b[~self.store.is_fine(uids_b)]
+            pending_per_q.append(p if refine_budget is None
+                                 else p[:refine_budget])
+        # coarse fallbacks snapshotted before any upgrade
+        fallbacks = [self.store.get_embeddings(u) for u, _ in cands]
+        union: List[int] = []
+        seen = set()
+        for p in pending_per_q:
+            for u in p.tolist():
+                if u not in seen:
+                    seen.add(u)
+                    union.append(u)
+        refined: Dict[int, np.ndarray] = {}
+        if union:
+            refined = refine_batch(self.refine_fn,
+                                   np.asarray(union, np.int64))
+            if refined:
+                r_uids = np.fromiter(refined.keys(), np.int64, len(refined))
+                self.store.upgrade_batch(
+                    r_uids, np.stack([refined[int(u)] for u in r_uids]))
+        t3 = time.perf_counter()
+
+        ranked = []
+        for b in range(B):
+            uids_b, _ = cands[b]
+            fine_embs = fallbacks[b]
+            pend = set(pending_per_q[b].tolist())
+            n_ref = 0
+            for j, u in enumerate(uids_b.tolist()):
+                if u in refined and u in pend:
+                    fine_embs[j] = refined[u]
+                    n_ref += 1
+            if len(fine_embs):
+                scores = fine_embs @ fine_q[b]
+                order = np.argsort(-scores)[:final_k]
+                ranked.append((uids_b[order], scores[order], uids_b, n_ref))
+            else:
+                ranked.append((np.zeros((0,), np.int64),
+                               np.zeros((0,), np.float32), uids_b, n_ref))
+        t4 = time.perf_counter()
+        per_round = {"filter": (t1 - t0) / B, "verify": (t2 - t1) / B,
+                     "refine": (t3 - t2) / B, "match": (t4 - t3) / B}
+        return [RetrievalResult(uids=u, scores=s, filtered_uids=fu,
+                                n_refined=n, latency_s=(t4 - t0) / B,
+                                per_round_s=dict(per_round))
+                for u, s, fu, n in ranked]

@@ -1,13 +1,94 @@
 """Pytest config. NOTE: deliberately does NOT set
 --xla_force_host_platform_device_count — smoke tests and benches must see one
-device; multi-device tests spawn subprocesses with their own XLA_FLAGS."""
+device; multi-device tests spawn subprocesses with their own XLA_FLAGS.
+
+When ``hypothesis`` is not installed (it is an optional dev dep, see
+requirements-dev.txt) a minimal deterministic fallback is registered in
+``sys.modules`` so the property-test modules still collect and run: each
+``@given`` test executes ``max_examples`` times with seeded random draws
+covering the subset of the strategy API this repo uses (integers / floats /
+lists). Caveats vs real hypothesis: no shrinking, and the stub wrapper hides
+the test signature, so combining ``@given`` with pytest fixtures is NOT
+supported (no repo test does this today — keep it that way or install the
+real package).
+"""
+import functools
 import os
 import sys
+import types
+import zlib
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np  # noqa: E402
 import pytest  # noqa: E402
+
+
+def _install_hypothesis_fallback():
+    class _Strategy:
+        def __init__(self, draw):
+            self.example = draw
+
+    def integers(min_value, max_value):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    def floats(min_value, max_value):
+        return _Strategy(
+            lambda rng: float(rng.uniform(min_value, max_value)))
+
+    def lists(elements, min_size=0, max_size=10):
+        return _Strategy(lambda rng: [
+            elements.example(rng)
+            for _ in range(int(rng.integers(min_size, max_size + 1)))])
+
+    def sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
+
+    def given(*strats):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = wrapper._stub_settings.get("max_examples", 20)
+                rng = np.random.default_rng(
+                    zlib.crc32(fn.__qualname__.encode()))
+                for _ in range(n):
+                    fn(*args, *[s.example(rng) for s in strats], **kwargs)
+            # keep pytest from introspecting the wrapped signature and
+            # treating the drawn parameters as fixtures
+            del wrapper.__wrapped__
+            # inherit settings applied below @given (either decorator order)
+            wrapper._stub_settings = dict(getattr(fn, "_stub_settings", {}))
+            return wrapper
+        return deco
+
+    def settings(**kw):
+        def deco(fn):
+            if not hasattr(fn, "_stub_settings"):
+                fn._stub_settings = {}
+            fn._stub_settings.update(kw)
+            return fn
+        return deco
+
+    strategies = types.ModuleType("hypothesis.strategies")
+    strategies.integers = integers
+    strategies.floats = floats
+    strategies.lists = lists
+    strategies.sampled_from = sampled_from
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = strategies
+    mod.__stub__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies
+
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    _install_hypothesis_fallback()
 
 
 @pytest.fixture(scope="session")

@@ -112,6 +112,50 @@ def test_query_latency_budget(service):
     assert res.n_refined <= 3
 
 
+def test_query_batch_matches_sequential_queries(service):
+    """Each query_batch result == query() alone against a fresh store:
+    identical top-k uids, scores within 1e-5 (the acceptance parity check).
+    (Fresh store per sequential query because a batch shares refinements the
+    way independent fresh-store queries do, while a mutating sequential loop
+    lets earlier upgrades requantize later queries' candidates.)"""
+    params, predictor, data = service
+    nq = 6
+
+    def build():
+        eng = _engine(params, predictor)
+        eng.submit_batch(np.arange(32), data.items["vision"][:32])
+        eng.drain()
+        return QueryEngine(params, CFG, RC, store=eng.store,
+                           refine_fn=eng.refine_fn(), query_modality="text",
+                           fw_kw=FW)
+    seq = [build().query(data.items["text"][i], k=8) for i in range(nq)]
+    bat = build().query_batch(data.items["text"][:nq], k=8)
+    for i, (a, b) in enumerate(zip(seq, bat)):
+        np.testing.assert_array_equal(a.uids, b.uids, err_msg=f"query {i}")
+        np.testing.assert_allclose(a.scores, b.scores, atol=1e-5)
+        assert a.n_refined == b.n_refined
+
+
+def test_query_batch_smoke_refines_and_upgrades(service):
+    params, predictor, data = service
+    eng = _engine(params, predictor)
+    eng.submit_batch(np.arange(32), data.items["vision"][:32])
+    eng.drain()
+    q = QueryEngine(params, CFG, RC, store=eng.store,
+                    refine_fn=eng.refine_fn(), query_modality="text", fw_kw=FW)
+    res = q.query_batch(data.items["text"][:4], k=8, refine_budget=3)
+    assert len(res) == 4
+    assert all(r.n_refined <= 3 for r in res)
+    assert sum(r.n_refined for r in res) > 0
+    assert eng.store.n_fine > 0
+    # §5.3: a second identical batch hits upgraded embeddings
+    res2 = q.query_batch(data.items["text"][:4], k=8, refine_budget=3)
+    assert sum(r.n_refined for r in res2) <= sum(r.n_refined for r in res)
+    # non-speculative batch path
+    res3 = q.query_batch(data.items["text"][:4], k=8, speculative=False)
+    assert all(r.n_refined == 0 and len(r.uids) == 8 for r in res3)
+
+
 def test_branchynet_policy_runs(service):
     params, predictor, data = service
     eng = _engine(params, predictor, policy="branchynet")

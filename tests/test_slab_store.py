@@ -1,0 +1,324 @@
+"""Slab-backed EmbeddingStore + fused batched retrieval: growth, uid index,
+batched upgrade, search_batch parity vs the numpy path, kernel dispatch."""
+import numpy as np
+import pytest
+
+from repro.core import retrieval as RT
+from repro.core.store import EmbeddingStore
+from repro.kernels.retrieval_topk.ops import retrieval_topk
+from repro.kernels.retrieval_topk.ref import retrieval_topk_reference
+
+import jax
+
+
+def _embs(n, e=32, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, e)).astype(np.float32)
+    return x / np.linalg.norm(x, axis=-1, keepdims=True)
+
+
+# ---------------------------------------------------------------------------
+# slab growth + uid index
+# ---------------------------------------------------------------------------
+
+
+def test_slab_growth_preserves_contents():
+    """Insert far past the initial capacity, mixing per-item and batched
+    adds; every row must survive the doublings bit-exactly."""
+    E = 16
+    st = EmbeddingStore(E, capacity=2)
+    embs = _embs(100, E)
+    for i in range(10):
+        st.add(i, embs[i], exit_idx=i % 3, exit_layer=(i % 3) + 1)
+    st.add_batch(np.arange(10, 100), embs[10:], np.arange(90) % 3,
+                 np.arange(90) % 3 + 1)
+    assert len(st) == 100
+    # per-item and batched quantization must agree: compare against a
+    # one-shot store of the same rows
+    ref = EmbeddingStore(E, capacity=128)
+    ref.add_batch(np.arange(100), embs, np.arange(100) % 3,
+                  np.arange(100) % 3 + 1)
+    np.testing.assert_array_equal(st.dense_matrix(), ref.dense_matrix())
+    # uid index survived growth
+    for uid in (0, 7, 55, 99):
+        assert int(st.uids()[st.row_of(uid)]) == uid
+
+
+def test_uid_index_and_meta_vectors():
+    st = EmbeddingStore(8, capacity=4)
+    st.add_batch([5, 9, 2], _embs(3, 8), [0, 1, 2], [1, 2, 3],
+                 modality="vision")
+    assert st.row_of(9) == 1 and st._index_of(2) == 2
+    with pytest.raises(KeyError):
+        st.rows_of([5, 404])
+    np.testing.assert_array_equal(st.uids(), [5, 9, 2])
+    np.testing.assert_array_equal(st.exit_histogram(4), [1, 1, 1, 0])
+    assert all(e.modality == "vision" for e in st.entries)
+
+
+def test_upgrade_batch_sets_fine_and_frees_cache():
+    E = 16
+    st = EmbeddingStore(E, capacity=4)
+    embs = _embs(6, E)
+    hs = np.random.default_rng(1).standard_normal((6, 4, E)).astype(np.float32)
+    st.add_batch(np.arange(6), embs, np.zeros(6), np.ones(6), cached_hs=hs)
+    assert st.cached_activation(3) is not None
+    fine = _embs(2, E, seed=9)
+    st.upgrade_batch([3, 5], fine)
+    assert st.n_fine == 2
+    np.testing.assert_array_equal(st.is_fine(np.arange(6)),
+                                  [0, 0, 0, 1, 0, 1])
+    assert st.cached_activation(3) is None and st.cached_activation(5) is None
+    assert st.cached_activation(0) is not None
+    # upgraded rows re-searchable with the new embedding
+    uids, _ = st.search(fine[0], k=1)
+    assert uids[0] == 3
+
+
+def test_readd_existing_uid_overwrites_in_place():
+    """Re-adding a uid must not leave a ghost duplicate row in the slab."""
+    E = 16
+    st = EmbeddingStore(E, capacity=4)
+    embs = _embs(6, E)
+    st.add_batch(np.arange(4), embs[:4], np.zeros(4), np.ones(4))
+    new = _embs(1, E, seed=11)[0]
+    st.add(2, new, exit_idx=1, exit_layer=2)
+    assert len(st) == 4                      # no growth, row reused
+    uids, _ = st.search(new, k=4)
+    assert uids[0] == 2
+    assert (uids.tolist()).count(2) == 1     # no duplicate uid in results
+    e = st.entries[st.row_of(2)]
+    assert e.exit_idx == 1 and e.exit_layer == 2
+
+
+def test_readd_without_activations_evicts_stale_cache():
+    """Re-adding a uid with no cached_hs must not leave the previous
+    content's activations for refinement to resume from."""
+    E = 16
+    st = EmbeddingStore(E, capacity=4)
+    h = np.random.default_rng(3).standard_normal((1, 4, E)).astype(np.float32)
+    st.add_batch([9], _embs(1, E), [0], [2], cached_hs=h)
+    assert st.cached_activation(9) is not None
+    st.add(9, _embs(1, E, seed=8)[0], exit_idx=0, exit_layer=2)
+    assert st.cached_activation(9) is None
+    assert len(st) == 1
+
+
+def test_modality_roundtrips_without_truncation():
+    st = EmbeddingStore(8, capacity=2)
+    long_name = "thermal_longwave_infrared_camera"
+    st.add_batch([1], _embs(1, 8), [0], [1], modality=long_name)
+    st.add_batch([2], _embs(1, 8, seed=1), [0], [1], modality="imu")
+    assert st.entries[0].modality == long_name
+    assert st.entries[1].modality == "imu"
+
+
+def test_incremental_dense_cache_tracks_mutations():
+    """dense_matrix must reflect interleaved adds + upgrades without a full
+    rebuild (dirty-row refresh only)."""
+    E = 8
+    st = EmbeddingStore(E, capacity=2)
+    a = _embs(4, E)
+    st.add_batch(np.arange(4), a, np.zeros(4), np.ones(4))
+    d1 = st.dense_matrix().copy()
+    st.add(4, a[0], exit_idx=0, exit_layer=1)
+    new = _embs(1, E, seed=7)[0]
+    st.upgrade(2, new)
+    d2 = st.dense_matrix()
+    np.testing.assert_array_equal(d2[:2], d1[:2])       # untouched rows
+    np.testing.assert_array_equal(d2[4], d1[0])          # new row
+    assert np.abs(d2[2] - new).max() < 1.0 / 7 + 1e-3    # upgraded row
+
+
+def test_dense_snapshot_is_stable_and_readonly():
+    """An escaped dense_matrix view must stay internally consistent (COW on
+    overlapping upgrade) and reject writes."""
+    E = 8
+    st = EmbeddingStore(E, capacity=4)
+    a = _embs(4, E)
+    st.add_batch(np.arange(4), a, np.zeros(4), np.ones(4))
+    snap = st.dense_matrix()
+    before = snap.copy()
+    with pytest.raises(ValueError):
+        snap[0, 0] = 99.0
+    st.upgrade(1, _embs(1, E, seed=5)[0])
+    st.search(a[0], k=2)  # forces the dirty-row refresh
+    np.testing.assert_array_equal(snap, before)      # old snapshot untouched
+    assert not np.array_equal(st.dense_matrix()[1], before[1])  # new one moved
+
+
+def test_batched_cached_activations_match_per_uid():
+    E = 16
+    st = EmbeddingStore(E, capacity=4)
+    hs = np.random.default_rng(2).standard_normal((5, 3, E)).astype(np.float32)
+    st.add_batch(np.arange(5), _embs(5, E), np.zeros(5), np.full(5, 2),
+                 cached_hs=hs)
+    batch = st.cached_activations([0, 2, 4, 77])
+    assert set(batch) == {0, 2, 4}
+    for u in (0, 2, 4):
+        h_single, layer_single = st.cached_activation(u)
+        h_batch, layer_batch = batch[u]
+        np.testing.assert_array_equal(h_single, h_batch)
+        assert layer_single == layer_batch == 2
+        assert np.abs(h_batch - hs[u]).max() < np.abs(hs[u]).max() / 7 + 1e-3
+
+
+# ---------------------------------------------------------------------------
+# search_batch parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,k", [(37, 5), (200, 10), (1000, 16)])
+def test_search_batch_matches_seed_numpy_search(n, k):
+    """Fused batched search == the seed per-query numpy search: identical
+    uids, scores within 1e-5."""
+    E = 32
+    st = EmbeddingStore(E, capacity=8)
+    embs = _embs(n, E)
+    st.add_batch(np.arange(n), embs, np.zeros(n), np.ones(n))
+    queries = _embs(6, E, seed=3)
+    bu, bs = st.search_batch(queries, k)           # auto (numpy on CPU)
+    pu, ps = st.search_batch(queries, k, impl="pallas")  # fused kernel
+    nu, ns = st.search_batch(queries, k, impl="numpy")
+    assert bu.shape == (6, min(k, n))
+    for g in range(len(queries)):
+        su, ss = st.search(queries[g], k)          # seed-style per-query
+        np.testing.assert_array_equal(bu[g], su)
+        np.testing.assert_allclose(bs[g], ss, atol=1e-5)
+        np.testing.assert_array_equal(pu[g], su)
+        np.testing.assert_allclose(ps[g], ss, atol=1e-5)
+        np.testing.assert_array_equal(nu[g], su)
+        np.testing.assert_allclose(ns[g], ss, atol=1e-5)
+
+
+def test_search_batch_empty_store():
+    st = EmbeddingStore(8)
+    u, s = st.search_batch(_embs(3, 8), 5)
+    assert u.shape == (3, 0) and s.shape == (3, 0)
+
+
+def test_search_after_upgrade_is_consistent():
+    """Reads after a §5.3 upgrade must see the refreshed row (the seed had a
+    stale-cache race here)."""
+    E = 16
+    st = EmbeddingStore(E, capacity=4)
+    embs = _embs(10, E)
+    st.add_batch(np.arange(10), embs, np.zeros(10), np.ones(10))
+    target = _embs(1, E, seed=42)[0]
+    st.upgrade(7, target)
+    u, _ = st.search_batch(target[None], 1)
+    assert u[0, 0] == 7
+
+
+# ---------------------------------------------------------------------------
+# kernel dispatch (ops.retrieval_topk auto-select)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("N,block_n", [(77, 32), (1000, 128), (130, 128)])
+def test_ops_topk_auto_matches_reference_ragged_n(N, block_n):
+    """auto (pallas-interpret on CPU) == jnp reference at N not divisible by
+    block_n."""
+    q = jax.random.normal(jax.random.PRNGKey(1), (5, 16))
+    bank = jax.random.normal(jax.random.PRNGKey(2), (N, 16))
+    sr, ir = retrieval_topk_reference(q, bank, 7)
+    sa, ia = retrieval_topk(q, bank, 7, impl="auto", block_q=4,
+                            block_n=block_n)
+    np.testing.assert_allclose(np.asarray(sr), np.asarray(sa), atol=1e-5)
+    for r in range(5):
+        assert (set(np.asarray(ir[r]).tolist())
+                == set(np.asarray(ia[r]).tolist()))
+
+
+def test_ops_topk_n_valid_masks_and_reuses_one_trace():
+    """A capacity-padded bank + runtime n_valid must match the reference on
+    the live rows AND reuse a single jit trace across fill levels."""
+    from repro.kernels.retrieval_topk import ops as O
+    rng = np.random.default_rng(0)
+    q = np.asarray(rng.standard_normal((3, 8)), np.float32)
+    slab = np.asarray(rng.standard_normal((16, 8)), np.float32)
+    fn_p = O._jitted("pallas", 4, False, (("block_n", 8), ("block_q", 4),
+                                          ("interpret", True)))
+    fn_x = O._jitted("xla", 4, False, ())
+    for n in (5, 9, 13):
+        sr, ir = retrieval_topk_reference(q, slab[:n], 4, normalize=False)
+        for impl, kw in (("pallas", dict(interpret=True, block_q=4,
+                                         block_n=8)), ("xla", {})):
+            sp, ip = O.retrieval_topk(q, slab, 4, normalize=False, impl=impl,
+                                      n_valid=n, **kw)
+            np.testing.assert_allclose(np.asarray(sp), np.asarray(sr),
+                                       atol=1e-5)
+            assert np.asarray(ip).max() < n
+            for r in range(3):
+                assert (set(np.asarray(ip[r]).tolist())
+                        == set(np.asarray(ir[r]).tolist()))
+    # one compile per backend serves every fill level
+    assert fn_p._cache_size() == 1 and fn_x._cache_size() == 1
+
+
+def test_ops_topk_rejects_unknown_impl():
+    q = jax.random.normal(jax.random.PRNGKey(1), (2, 8))
+    with pytest.raises(ValueError):
+        retrieval_topk(q, q, 2, impl="cuda")
+
+
+# ---------------------------------------------------------------------------
+# vectorized retrieval rounds
+# ---------------------------------------------------------------------------
+
+
+def test_global_verify_matches_dict_reference():
+    """Vectorized dedup == the seed's dict-based merge on random rounds."""
+    rng = np.random.default_rng(0)
+    for trial in range(20):
+        rounds = []
+        for _ in range(rng.integers(1, 5)):
+            m = int(rng.integers(1, 12))
+            rounds.append((rng.integers(0, 20, m).astype(np.int64),
+                           rng.standard_normal(m).astype(np.float32)))
+        k = int(rng.integers(1, 10))
+        best = {}
+        for us, ss in rounds:
+            for u, s in zip(us.tolist(), ss.tolist()):
+                if u not in best or s > best[u]:
+                    best[u] = s
+        ref = sorted(best.items(), key=lambda kv: -kv[1])[:k]
+        got_u, got_s = RT.global_verify(rounds, k)
+        np.testing.assert_allclose(got_s, [s for _, s in ref], atol=1e-6)
+        np.testing.assert_array_equal(got_u, [u for u, _ in ref])
+
+
+def test_speculative_retrieve_legacy_scalar_refine_fn():
+    """Seed-contract callables that branch on the uid (and so choke on an
+    array argument) still work: the batch attempt falls back to per-uid."""
+    st = EmbeddingStore(16, capacity=8)
+    embs = _embs(12, 16)
+    st.add_batch(np.arange(12), embs, np.zeros(12), np.ones(12))
+
+    def legacy(uid):  # `uid >= 6` on an array raises in the `if`
+        return None if uid >= 6 else embs[uid]
+
+    res = RT.speculative_retrieve(st, [embs[2]], fine_query=embs[2], k=8,
+                                  refine_fn=legacy)
+    assert res.uids[0] == 2
+    assert 0 < res.n_refined <= 8
+    assert st.n_fine == res.n_refined
+
+
+def test_speculative_retrieve_batched_refine_fn():
+    """A mapping-returning batched refine_fn refines every non-fine candidate
+    in one call and upgrades the store."""
+    st = EmbeddingStore(16, capacity=8)
+    embs = _embs(24, 16)
+    st.add_batch(np.arange(24), embs, np.zeros(24), np.ones(24))
+    calls = []
+
+    def refine(uids):
+        calls.append(np.asarray(uids))
+        return {int(u): embs[int(u)] for u in np.asarray(uids)}
+
+    res = RT.speculative_retrieve(st, [embs[4]], fine_query=embs[4], k=6,
+                                  refine_fn=refine)
+    assert res.uids[0] == 4 and res.n_refined == 6
+    assert len(calls) == 1 and len(calls[0]) == 6   # ONE batched call
+    assert st.n_fine == 6
