@@ -1,0 +1,105 @@
+"""Throughput-regression guard for the store-scaling benchmark.
+
+Diffs a fresh ``benchmarks/artifacts/BENCH_store_scale.json`` against the
+committed baseline (``benchmarks/baselines/BENCH_store_scale.json``) and
+fails when any throughput metric regresses by more than ``THRESHOLD``
+(default 20%). Rows are matched by store size ``n``; metrics present in
+only one side are ignored (so adding a column never trips the guard), and
+a missing baseline is a skip, not a failure (first run / fresh clone).
+
+Absolute items/s and q/s are machine-dependent, so the committed baseline
+only guards *this* machine class; the invariant checks that must hold
+everywhere (steady-state H2D == 0, top-k parity) are asserted inside
+``store_scale.py`` itself. Refresh the baseline after an intentional perf
+change with ``--update-baseline``.
+
+Run:  PYTHONPATH=src python -m benchmarks.check_regression [--threshold 0.2]
+Wired into ``benchmarks/run.py`` right after the store_scale suite.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts",
+                   "BENCH_store_scale.json")
+BASE = os.path.join(os.path.dirname(__file__), "baselines",
+                    "BENCH_store_scale.json")
+THRESHOLD = 0.20
+
+# higher-is-better metrics guarded against regression
+THROUGHPUT_KEYS = (
+    "insert_batch_items_per_s",
+    "insert_per_item_items_per_s",
+    "qps_numpy",
+    "qps_reupload",
+    "qps_reupload_xla",
+    "qps_device",
+    "qps_sharded",   # None unless run with >1 visible device
+)
+
+
+def compare(fresh: dict, base: dict, threshold: float = THRESHOLD):
+    """Returns (regressions, checked): lists of (n, key, base, fresh, ratio)."""
+    base_by_n = {r["n"]: r for r in base.get("rows", [])}
+    regressions, checked = [], []
+    for row in fresh.get("rows", []):
+        ref = base_by_n.get(row["n"])
+        if ref is None:
+            continue
+        for key in THROUGHPUT_KEYS:
+            if not row.get(key) or not ref.get(key):
+                continue
+            ratio = row[key] / ref[key]
+            entry = (row["n"], key, ref[key], row[key], ratio)
+            checked.append(entry)
+            if ratio < 1.0 - threshold:
+                regressions.append(entry)
+    return regressions, checked
+
+
+def main(threshold: float = THRESHOLD, update_baseline: bool = False):
+    # raise RuntimeError (not SystemExit): benchmarks/run.py isolates suite
+    # failures with `except Exception`, and SystemExit would abort the whole
+    # orchestrator instead of being recorded like any other suite failure
+    if not os.path.exists(ART):
+        raise RuntimeError(f"no fresh artifact at {ART}; run "
+                           "benchmarks.store_scale first")
+    if update_baseline:
+        os.makedirs(os.path.dirname(BASE), exist_ok=True)
+        shutil.copyfile(ART, BASE)
+        print(f"[check_regression] baseline updated from {ART}")
+        return
+    if not os.path.exists(BASE):
+        print(f"[check_regression] no committed baseline at {BASE}; "
+              "skipping (run with --update-baseline to create one)")
+        return
+    with open(ART) as f:
+        fresh = json.load(f)
+    with open(BASE) as f:
+        base = json.load(f)
+    regressions, checked = compare(fresh, base, threshold)
+    for n, key, b, a, ratio in checked:
+        flag = "  REGRESSION" if ratio < 1.0 - threshold else ""
+        print(f"[check_regression] n={n:>9,} {key:<28} "
+              f"{b:>12,.0f} -> {a:>12,.0f}  ({ratio:5.2f}x){flag}")
+    if regressions:
+        worst = min(regressions, key=lambda e: e[4])
+        raise RuntimeError(
+            f"{len(regressions)} throughput metric(s) regressed more than "
+            f"{threshold:.0%} vs the committed baseline (worst: {worst[1]} "
+            f"at n={worst[0]:,}, {worst[4]:.2f}x)")
+    print(f"[check_regression] OK: {len(checked)} metrics within "
+          f"{threshold:.0%} of baseline")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--threshold", type=float, default=THRESHOLD)
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="copy the fresh artifact over the committed "
+                         "baseline instead of checking")
+    args = ap.parse_args()
+    main(args.threshold, args.update_baseline)

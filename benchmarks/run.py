@@ -22,6 +22,7 @@ SUITES = [
     ("fig16_energy", "Fig 16: energy & memory"),
     ("storage_cost", "§5.4: storage cost"),
     ("store_scale", "Store scaling: insert throughput & query latency"),
+    ("check_regression", "Guard: store-scale throughput vs committed baseline"),
     ("roofline", "§Roofline: dry-run report"),
 ]
 

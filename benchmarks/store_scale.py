@@ -1,14 +1,25 @@
-"""Store scaling: insert throughput + query latency vs store size.
+"""Store scaling: insert throughput + query latency/transfer vs store size.
 
 Measures, at 1k/10k/100k items:
-  * batched insert path (``add_batch``: one quantize call per chunk) vs the
-    seed-style per-item path (one ``add`` → one device round-trip per item),
-  * query latency of the numpy matmul+argpartition path vs the fused Pallas
-    ``retrieval_topk`` path (``search_batch``), with a parity check that both
-    return identical uids.
+  * batched insert path (``add_batch``: one host-side quantize per chunk) vs
+    the seed-style per-item path,
+  * query cost of four scan paths over the same store:
+      - ``numpy``   — host matmul+argpartition (CPU reference),
+      - ``pallas``  — fused kernel with the fp32 slab re-uploaded per call
+                      (interpret mode on CPU: the *proxy for the pre-bank
+                      accelerator path* this PR replaces),
+      - ``xla``     — compiled jnp scan, fp32 slab re-uploaded per call,
+      - ``device``  — DeviceBank: int4 slab resident on device, fused
+                      dequant scan, incremental dirty-row refresh,
+  * host->device transfer volume per path. The device path's invariant is
+    asserted EXACTLY: after warm-up, steady-state queries move zero bytes,
+    and a mutation refreshes only the dirty rows (never the full slab),
+  * the sharded bank (rows partitioned across jax.devices(), per-shard
+    fused scan + one small all-gather merge) when more than one device is
+    visible — e.g. XLA_FLAGS=--xla_force_host_platform_device_count=8.
 
-Emits ``BENCH_store_scale.json`` (benchmarks/artifacts/) so later PRs have a
-perf trajectory to compare against.
+Emits ``BENCH_store_scale.json`` (benchmarks/artifacts/);
+``benchmarks/check_regression.py`` diffs it against the committed baseline.
 
 Run:  PYTHONPATH=src python -m benchmarks.store_scale [--sizes 1000,10000]
 """
@@ -24,15 +35,15 @@ from repro.core.store import EmbeddingStore
 
 EMBED_DIM = 256
 INSERT_CHUNK = 8192
-PER_ITEM_CAP = 10_000   # per-item baseline is O(N) device calls; cap + scale
+PER_ITEM_CAP = 10_000   # per-item baseline is O(N) host calls; cap + scale
 N_QUERY = 8
-QUERY_REPS = 3
+QUERY_REPS = 5
 
 
 def _bench_insert(embs: np.ndarray) -> dict:
     n = len(embs)
-    # warm the jit caches (quantize compile is shape-specific, incl. the
-    # final ragged chunk) so both paths are measured at steady state
+    # warm any caches (quantize is host-numpy now, but keep both paths at
+    # steady state for a fair comparison)
     warm = EmbeddingStore(EMBED_DIM, capacity=64)
     for i in range(0, n, INSERT_CHUNK):
         chunk = embs[i:i + INSERT_CHUNK]
@@ -60,24 +71,93 @@ def _bench_insert(embs: np.ndarray) -> dict:
             "per_item_measured": m}
 
 
+def _median_ms(fn, reps: int = QUERY_REPS) -> float:
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e3)
+
+
 def _bench_query(store: EmbeddingStore, queries: np.ndarray) -> dict:
-    # "pallas" forced explicitly: impl="auto" resolves to the numpy path on
-    # CPU, and the point of this column is the fused kernel's trajectory
+    """All four scan paths over one store, with transfer accounting."""
     out = {}
     uids_by_impl = {}
-    for impl in ("numpy", "pallas"):
-        times = []
-        for _ in range(QUERY_REPS):
-            t0 = time.perf_counter()
-            uids, _scores = store.search_batch(queries, 10, impl=impl)
-            times.append(time.perf_counter() - t0)
-        uids_by_impl[impl] = uids
-        out[f"{impl}_ms"] = float(np.median(times) * 1e3)
-    # per-row SET equality: fp32 matmul differences between BLAS and the jax
-    # kernel can swap near-tied adjacent ranks without being wrong
-    for a, b in zip(uids_by_impl["numpy"], uids_by_impl["pallas"]):
-        assert set(a.tolist()) == set(b.tolist()), \
-            "numpy and fused-kernel paths disagree on top-k uids"
+
+    # -- re-upload paths (fp32 slab travels to the device every call) -------
+    for impl in ("numpy", "pallas", "xla"):
+        store.search_batch(queries, 10, impl=impl)      # warm jit/dense cache
+        b0, c0 = store.upload_bytes, store.upload_calls
+        out[f"{impl}_ms"] = _median_ms(
+            lambda impl=impl: uids_by_impl.__setitem__(
+                impl, store.search_batch(queries, 10, impl=impl)[0]))
+        calls = store.upload_calls - c0
+        out[f"{impl}_h2d_bytes_per_call"] = (
+            (store.upload_bytes - b0) // calls if calls else 0)
+
+    # -- device-resident path ------------------------------------------------
+    bank = (store.device_bank if store.device_bank is not None
+            else store.attach_device_bank())
+    store.search_batch(queries, 10, impl="device")      # warm-up sync+compile
+    out["device_warmup_h2d_bytes"] = bank.h2d_bytes
+    b0 = bank.h2d_bytes
+    out["device_ms"] = _median_ms(
+        lambda: uids_by_impl.__setitem__(
+            "device", store.search_batch(queries, 10, impl="device")[0]))
+    # THE invariant this PR exists for, asserted exactly: steady-state
+    # queries move zero host->device bytes
+    steady = bank.h2d_bytes - b0
+    assert steady == 0, f"device path moved {steady}B at steady state"
+    out["device_steady_h2d_bytes"] = steady
+    out["device_n_shards"] = bank.n_shards
+
+    # -- incremental refresh: a mutation moves only the dirty rows ----------
+    m_dirty = min(64, len(store))
+    rng = np.random.default_rng(7)
+    fresh = rng.standard_normal((m_dirty, EMBED_DIM)).astype(np.float32)
+    store.upgrade_batch(np.arange(m_dirty), fresh)
+    b0, r0 = bank.h2d_bytes, bank.h2d_rows
+    store.search_batch(queries, 10, impl="device")
+    refresh = bank.h2d_bytes - b0
+    assert bank.h2d_rows - r0 == m_dirty, "refresh row count mismatch"
+    # far below one call of the re-upload path (the full fp32 slab; at toy
+    # sizes the scatter indices dominate the int4 payload, so that's the
+    # meaningful bound)
+    full_fp32 = int(store._dense.nbytes)
+    assert refresh < full_fp32, \
+        f"dirty refresh moved {refresh}B >= fp32 slab {full_fp32}B"
+    out["device_refresh_h2d_bytes"] = refresh
+    out["device_refresh_rows"] = m_dirty
+
+    # -- sharded path (needs >1 visible device, e.g. run under
+    #    XLA_FLAGS=--xla_force_host_platform_device_count=8) ----------------
+    import jax
+    devs = jax.devices()
+    if len(devs) > 1:
+        sbank = store.attach_device_bank(devs)       # re-shard across all
+        store.search_batch(queries, 10, impl="device")   # warm-up
+        b0 = sbank.h2d_bytes
+        out["sharded_ms"] = _median_ms(
+            lambda: uids_by_impl.__setitem__(
+                "sharded", store.search_batch(queries, 10, impl="device")[0]))
+        assert sbank.h2d_bytes == b0, "sharded steady state moved bytes"
+        out["sharded_n_shards"] = sbank.n_shards
+        ref, _ = store.search_batch(queries, 10, impl="numpy")
+        for a, b in zip(ref, uids_by_impl["sharded"]):
+            assert set(a.tolist()) == set(b.tolist()), \
+                "sharded and numpy paths disagree on top-k uids"
+    else:
+        out["sharded_ms"] = None
+        out["sharded_n_shards"] = 1
+
+    # per-row SET equality: fp32 matmul differences between BLAS, the jax
+    # kernel, and the int4-requantized bank can swap near-tied ranks; the
+    # upgraded rows above were requantized so compare the pre-upgrade runs
+    for impl in ("pallas", "xla", "device"):
+        for a, b in zip(uids_by_impl["numpy"], uids_by_impl[impl]):
+            assert set(a.tolist()) == set(b.tolist()), \
+                f"numpy and {impl} paths disagree on top-k uids"
     return out
 
 
@@ -90,23 +170,55 @@ def main(sizes=(1_000, 10_000, 100_000)):
         embs /= np.linalg.norm(embs, axis=-1, keepdims=True)
         ins = _bench_insert(embs)
         qry = _bench_query(ins["store"], queries)
+        qps = {p: N_QUERY / (qry[f"{p}_ms"] / 1e3)
+               for p in ("numpy", "pallas", "xla", "device")}
+        # "re-upload path" = the pre-bank accelerator path (fused kernel +
+        # full fp32 slab upload per call; interpret-mode numbers on CPU are
+        # the documented proxy — see ISSUE/ROADMAP)
+        speedup = qps["device"] / qps["pallas"]
         rows.append([f"{n:,}", f"{ins['batch_ips']:,.0f}",
-                     f"{ins['per_item_ips']:,.0f}", f"{ins['speedup']:.1f}x",
-                     f"{qry['numpy_ms']:.1f}", f"{qry['pallas_ms']:.1f}"])
-        payload.append({"n": n, "embed_dim": EMBED_DIM,
-                        "insert_batch_items_per_s": ins["batch_ips"],
-                        "insert_per_item_items_per_s": ins["per_item_ips"],
-                        "insert_speedup": ins["speedup"],
-                        "per_item_measured_on": ins["per_item_measured"],
-                        "query_numpy_ms": qry["numpy_ms"],
-                        "query_fused_ms": qry["pallas_ms"],
-                        "n_queries": N_QUERY, "topk_uids_match": True})
+                     f"{ins['speedup']:.1f}x",
+                     f"{qry['numpy_ms']:.1f}", f"{qry['pallas_ms']:.1f}",
+                     f"{qry['xla_ms']:.1f}", f"{qry['device_ms']:.1f}",
+                     f"{speedup:.1f}x",
+                     f"{qry['pallas_h2d_bytes_per_call']:,}",
+                     f"{qry['device_steady_h2d_bytes']}"])
+        payload.append({
+            "n": n, "embed_dim": EMBED_DIM,
+            "insert_batch_items_per_s": ins["batch_ips"],
+            "insert_per_item_items_per_s": ins["per_item_ips"],
+            "insert_speedup": ins["speedup"],
+            "per_item_measured_on": ins["per_item_measured"],
+            "query_numpy_ms": qry["numpy_ms"],
+            "query_fused_ms": qry["pallas_ms"],   # back-compat alias
+            "query_reupload_pallas_ms": qry["pallas_ms"],
+            "query_reupload_xla_ms": qry["xla_ms"],
+            "query_device_ms": qry["device_ms"],
+            "reupload_h2d_bytes_per_query": qry["pallas_h2d_bytes_per_call"],
+            "device_warmup_h2d_bytes": qry["device_warmup_h2d_bytes"],
+            "device_steady_h2d_bytes": qry["device_steady_h2d_bytes"],
+            "device_refresh_h2d_bytes": qry["device_refresh_h2d_bytes"],
+            "device_refresh_rows": qry["device_refresh_rows"],
+            "device_n_shards": qry["device_n_shards"],
+            "query_sharded_ms": qry["sharded_ms"],
+            "sharded_n_shards": qry["sharded_n_shards"],
+            "qps_sharded": (None if qry["sharded_ms"] is None
+                            else N_QUERY / (qry["sharded_ms"] / 1e3)),
+            "qps_numpy": qps["numpy"], "qps_reupload": qps["pallas"],
+            "qps_reupload_xla": qps["xla"], "qps_device": qps["device"],
+            "speedup_device_vs_reupload": speedup,
+            "n_queries": N_QUERY, "topk_uids_match": True})
         print(f"[store_scale] n={n:,}: insert {ins['batch_ips']:,.0f} items/s "
-              f"batched vs {ins['per_item_ips']:,.0f} per-item "
-              f"({ins['speedup']:.1f}x)")
-    C.print_table("store scaling — insert throughput & query latency", rows,
-                  ["items", "batched ins/s", "per-item ins/s", "speedup",
-                   "numpy q ms", "fused q ms"])
+              f"({ins['speedup']:.1f}x vs per-item); device-resident "
+              f"{qps['device']:,.0f} q/s = {speedup:.1f}x the re-upload path, "
+              f"steady-state H2D {qry['device_steady_h2d_bytes']}B")
+        if n >= 100_000 and speedup < 5:
+            print(f"[store_scale] WARNING: device speedup {speedup:.1f}x "
+                  f"< 5x at n={n:,}")
+    C.print_table(
+        "store scaling — insert, query paths, transfer volume", rows,
+        ["items", "batch ins/s", "ins spd", "numpy ms", "reupload ms",
+         "xla ms", "device ms", "dev spd", "reupload B/q", "steady B/q"])
     path = C.save_json("BENCH_store_scale.json", {"rows": payload})
     print(f"wrote {path}")
 

@@ -1,0 +1,287 @@
+"""Device-resident embedding bank: the searchable copy of the store's int4
+slab, kept on-accelerator and refreshed *incrementally*.
+
+Why it exists
+-------------
+After PR 1 the serving hot path still re-uploaded the whole fp32 dense slab
+to the device on every ``search_batch`` call (``jnp.asarray(slab)``) and kept
+that fp32 copy — 8x the int4 footprint — purely to feed the scan. On
+accelerators the dominant query cost is that H2D transfer. ``DeviceBank``
+makes the *quantized* slab itself the searchable index:
+
+  * ``_packed`` (cap, E//2) int8 + ``_scales`` (cap, 1) fp32 live on device
+    (row-sharded across ``devices`` when more than one is given),
+  * queries run the fused dequant-and-scan ``retrieval_topk_int4`` — rows
+    dequantize block-wise in VMEM/cache right before scoring, so the fp32
+    bank never materializes anywhere,
+  * refresh scatters ONLY rows dirtied since the last sync
+    (``jax.Array.at[rows].set`` — the host payload is just the dirty rows;
+    the scatter publishes a fresh device buffer copy-on-write so in-flight
+    scans keep their snapshot), and grows by slab-doubling *on device* in
+    lockstep with the host slab (a device-to-device copy, no re-upload).
+
+Refresh protocol & consistency
+------------------------------
+``DeviceBank`` is not thread-safe on its own; ``EmbeddingStore`` drives it
+under the same lock as slab mutations:
+
+  1. The store keeps a per-bank dirty bitmap (``_bank_dirty``) set by
+     ``add_batch`` / ``upgrade_batch`` alongside the dense-cache dirty bits.
+  2. ``search_batch(impl='device')`` calls ``sync`` under the store lock:
+     capacity is doubled on device if the host slab grew, the dirty rows'
+     packed nibbles + scales are scattered, the bitmap is cleared, and the
+     uid snapshot is taken — all atomically with respect to writers.
+  3. The scan itself runs OUTSIDE the lock: ``search`` reads the
+     (packed, scales, n) triple as ONE atomically-published tuple, and the
+     arrays inside are immutable — a sync racing the scan can only publish
+     the *next* snapshot, so an in-flight query sees a stale-but-matched
+     snapshot, never torn rows or mismatched slab halves.
+
+Hence the guarantee: after ``sync`` returns, the device bank row i equals
+the host slab row i bit-exactly for every i < n at the sync point, and a
+query between syncs sees exactly the state of some previous sync.
+
+Transfer accounting: ``h2d_bytes`` / ``h2d_rows`` count the actual
+host-to-device payload (scattered rows + scales + indices). Steady-state
+queries transfer nothing — ``benchmarks/store_scale.py`` asserts the
+delta is exactly zero after warm-up.
+
+Sharded search (``len(devices) > 1``): rows are partitioned contiguously
+across a 1-D ``bank`` mesh; each shard runs the fused scan over its slice
+and the per-shard (Q, k) winners are merged with one small all-gather
+(``distributed.collectives.topk_allgather_merge``) — wire cost independent
+of bank size.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.collectives import topk_allgather_merge
+from repro.kernels.retrieval_topk.ops import (default_int4_impl,
+                                              retrieval_topk,
+                                              retrieval_topk_int4)
+from repro.kernels.retrieval_topk.ref import (retrieval_topk_int4_blocked,
+                                              retrieval_topk_reference)
+
+
+class DeviceBank:
+    """Device-resident (optionally sharded) searchable slab mirror.
+
+    ``store_int4=True`` mirrors the packed int4 + scales layout of
+    ``EmbeddingStore``; ``store_int4=False`` mirrors fp32 rows (debug mode)
+    and searches them with the dense kernel instead of the fused dequant
+    scan. See module docstring for the refresh protocol.
+    """
+
+    def __init__(self, embed_dim: int, *, store_int4: bool = True,
+                 devices: Optional[Sequence[jax.Device]] = None,
+                 impl: str = "auto", block_n: int = 4096):
+        self.embed_dim = embed_dim
+        self.store_int4 = store_int4
+        devs = list(devices) if devices is not None else list(jax.devices())
+        self.devices = devs
+        self.n_shards = len(devs)
+        self.mesh = Mesh(np.array(devs), ("bank",))
+        self._sh_rows = NamedSharding(self.mesh, P("bank"))
+        self._row_width = embed_dim // 2 if store_int4 else embed_dim
+        self._row_dtype = jnp.int8 if store_int4 else jnp.float32
+        self.impl = impl
+        self.block_n = block_n
+        self._cap = 0
+        # (packed, scales, n) swapped as ONE tuple: a reader (search) grabs
+        # the whole triple in a single atomic attribute read, so a sync
+        # racing a scan can only hand it a stale-but-matched snapshot,
+        # never a torn packed/scales pair
+        self._state: Optional[Tuple[jax.Array, jax.Array, int]] = None
+        # copy-on-write scatter: the update lands in a fresh device buffer
+        # (device-to-device; the host payload is still only the dirty rows).
+        # NOT donated — an in-flight search may still hold the old snapshot,
+        # and donation would invalidate it under its feet.
+        self._scatter = jax.jit(lambda a, r, v: a.at[r].set(v),
+                                out_shardings=self._sh_rows)
+        self._search_fns: Dict = {}
+        # host->device transfer accounting (see module docstring)
+        self.h2d_bytes = 0
+        self.h2d_rows = 0
+        self.n_syncs = 0
+        self.n_grows = 0
+
+    # -- state ---------------------------------------------------------------
+
+    def __len__(self) -> int:
+        return 0 if self._state is None else self._state[2]
+
+    @property
+    def capacity(self) -> int:
+        return self._cap
+
+    def stats(self) -> Dict[str, int]:
+        st = self._state
+        return {"h2d_bytes": self.h2d_bytes, "h2d_rows": self.h2d_rows,
+                "n_syncs": self.n_syncs, "n_grows": self.n_grows,
+                "capacity": self._cap, "n": len(self),
+                "n_shards": self.n_shards,
+                "device_bytes": 0 if st is None else
+                int(st[0].nbytes + st[1].nbytes)}
+
+    def device_bytes(self) -> int:
+        return self.stats()["device_bytes"]
+
+    # -- refresh -------------------------------------------------------------
+
+    def _device_zeros(self, shape, dtype) -> jax.Array:
+        return jax.device_put(jnp.zeros(shape, dtype), self._sh_rows)
+
+    def _grow_to(self, packed, scales, cap: int):
+        """Slab-doubling on device, in lockstep with the host slab: allocate
+        the doubled buffers and copy the old content device-to-device —
+        never a host re-upload. Returns the grown (packed, scales)."""
+        old_cap = self._cap
+        new_p = self._device_zeros((cap, self._row_width), self._row_dtype)
+        new_s = self._device_zeros((cap, 1), jnp.float32)
+        if packed is not None and old_cap:
+            new_p = jax.device_put(new_p.at[:old_cap].set(packed),
+                                   self._sh_rows)
+            new_s = jax.device_put(new_s.at[:old_cap].set(scales),
+                                   self._sh_rows)
+            self.n_grows += 1
+        self._cap = cap
+        self._search_fns.clear()  # traced shapes changed (O(log N) times)
+        return new_p, new_s
+
+    def sync(self, host_packed: np.ndarray, host_scales: np.ndarray,
+             n: int, dirty_rows: np.ndarray
+             ) -> Tuple[jax.Array, jax.Array, int]:
+        """Bring the device slab up to date with the host slab. Caller (the
+        store) must hold its mutation lock; ``dirty_rows`` are the row
+        indices written since the last sync. Only those rows travel. The
+        new (packed, scales, n) snapshot is published atomically at the
+        end and returned — an in-flight search keeps its old matched
+        snapshot; pass the return to ``search(state=...)`` to pin a scan
+        to this sync point."""
+        packed, scales = ((None, None) if self._state is None
+                          else self._state[:2])
+        # device capacity = host capacity rounded up to a multiple of the
+        # shard count (padded rows are masked by n_valid at query time)
+        cap = host_packed.shape[0]
+        cap += (-cap) % self.n_shards
+        if cap > self._cap:
+            packed, scales = self._grow_to(packed, scales, cap)
+        self.n_syncs += 1
+        dirty_rows = np.asarray(dirty_rows, np.int64).ravel()
+        if dirty_rows.size:
+            # pad the scatter to a pow2 bucket (duplicate last row:
+            # scattering the same value twice is idempotent) so jit retraces
+            # O(log N) distinct shapes instead of one per dirty count
+            m = int(dirty_rows.size)
+            bucket = 1 << (m - 1).bit_length()
+            pad = bucket - m
+            rows = np.concatenate([dirty_rows, np.full(pad, dirty_rows[-1])])
+            rows32 = rows.astype(np.int32)
+            vals = host_packed[rows]
+            scs = host_scales[rows]
+            packed = self._scatter(packed, rows32, vals)
+            scales = self._scatter(scales, rows32, scs)
+            self.h2d_bytes += int(vals.nbytes + scs.nbytes +
+                                  2 * rows32.nbytes)
+            self.h2d_rows += m
+        self._state = (packed, scales, int(n))
+        return self._state
+
+    # -- search --------------------------------------------------------------
+
+    def _resolve_impl(self) -> str:
+        if self.impl != "auto":
+            return self.impl
+        if self.store_int4:
+            return default_int4_impl()
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+    def _sharded_search_fn(self, k: int, impl: str, cap: int):
+        """Jitted shard_map search for a snapshot's capacity: per-shard
+        fused top-k over the local rows, one small all-gather merge."""
+        key = (k, cap, impl)
+        fn = self._search_fns.get(key)
+        if fn is not None:
+            return fn
+        rps = cap // self.n_shards
+        k_loc = min(k, rps)
+        int4 = self.store_int4
+        block_n = self.block_n
+        interpret = jax.default_backend() != "tpu"
+
+        def local(q, p, sc, n):
+            sid = jax.lax.axis_index("bank")
+            n_loc = jnp.clip(n - sid * rps, 0, rps).astype(jnp.int32)
+            if int4:
+                if impl == "pallas":
+                    from repro.kernels.retrieval_topk.kernel import (
+                        retrieval_topk_int4_pallas)
+                    s, i = retrieval_topk_int4_pallas(
+                        q, p, sc, k_loc, normalize=False, n_valid=n_loc,
+                        interpret=interpret)
+                else:
+                    s, i = retrieval_topk_int4_blocked(
+                        q, p, sc, k_loc, normalize=False, block_n=block_n,
+                        n_valid=n_loc)
+            else:
+                s, i = retrieval_topk_reference(q, p, k_loc, normalize=False,
+                                                n_valid=n_loc)
+            gids = i + (sid * rps).astype(jnp.int32)
+            return topk_allgather_merge(s, gids, k, "bank")
+
+        mesh = self.mesh
+
+        def search(q, p, sc, n):
+            return shard_map(local, mesh=mesh,
+                             in_specs=(P(), P("bank"), P("bank"), P()),
+                             out_specs=(P(), P()), check_rep=False)(
+                                 q, p, sc, n)
+
+        fn = jax.jit(search)
+        self._search_fns[key] = fn
+        return fn
+
+    def search(self, queries: np.ndarray, k: int, state=None, **kw
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        """Fused top-k over the device-resident bank: (Q, E) queries ->
+        (row indices (Q, k) int64, scores (Q, k) fp32), descending score.
+        Zero host->device slab traffic — only the query batch travels.
+        Scans ONE published (packed, scales, n) snapshot — pass the tuple
+        ``sync`` returned to pin the scan to that sync point (the store
+        does, keeping row indices aligned with its uid snapshot); defaults
+        to the latest. Extra ``kw`` are kernel tuning knobs (block_q, ...)
+        forwarded to the single-device scan; the sharded path configures its
+        kernel at bank construction (``block_n``) and rejects them."""
+        if state is None:
+            state = self._state
+        assert state is not None, "sync() before search()"
+        packed, scales, n = state
+        k = min(k, n)
+        q = jnp.asarray(np.asarray(queries, np.float32))
+        impl = self._resolve_impl()
+        if self.n_shards == 1:
+            if self.store_int4:
+                s, i = retrieval_topk_int4(q, packed, scales, k,
+                                           normalize=False, impl=impl,
+                                           n_valid=n,
+                                           **dict({"block_n": self.block_n},
+                                                  **kw))
+            else:
+                s, i = retrieval_topk(q, packed, k, normalize=False,
+                                      impl=impl, n_valid=n, **kw)
+        else:
+            if kw:
+                raise ValueError("sharded DeviceBank.search takes no kernel "
+                                 f"kwargs (got {sorted(kw)}); set block_n "
+                                 "at attach_device_bank time")
+            s, i = self._sharded_search_fn(k, impl, packed.shape[0])(
+                q, packed, scales, jnp.asarray(n, jnp.int32))
+        return np.asarray(i, np.int64), np.asarray(s, np.float32)

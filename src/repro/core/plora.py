@@ -124,22 +124,32 @@ def schedule_steps(exit_hist: np.ndarray, recall: RecallConfig) -> List[int]:
 
 
 def merge_lora(params: Schema, lora, recall: RecallConfig) -> Schema:
-    """Fold LoRA deltas into base weights (deployment-time merge)."""
+    """Fold LoRA deltas into base weights (deployment-time merge).
+
+    The A@B contraction and the W+delta sum run in float64 on host (numpy):
+    the merge happens once at deployment, so the extra precision is free,
+    and it keeps the merged weights within one fp32 ulp of the exact
+    W + (alpha/r)·A@B — the merged forward then tracks the on-the-fly LoRA
+    forward to fp32 accumulation noise (verified in test_transformer)."""
     scale = recall.lora_alpha / recall.lora_rank
     out = jax.tree.map(lambda x: x, params)  # shallow copy
     attn = dict(out["layers"]["attn"])
     mlp = dict(out["layers"].get("mlp", {}))
     for t, ab in lora.items():
-        a, b = ab["a"].astype(jnp.float32), ab["b"].astype(jnp.float32)
+        a = np.asarray(ab["a"], np.float64)
+        b = np.asarray(ab["b"], np.float64)
         if t in ("wq", "wk", "wv"):
-            delta = jnp.einsum("ldr,lrhk->ldhk", a, b) * scale
-            attn[t] = (attn[t].astype(jnp.float32) + delta).astype(attn[t].dtype)
+            delta = np.einsum("ldr,lrhk->ldhk", a, b) * scale
+            attn[t] = jnp.asarray(
+                np.asarray(attn[t], np.float64) + delta).astype(attn[t].dtype)
         elif t == "wo":
-            delta = jnp.einsum("lhkr,lrd->lhkd", a, b) * scale
-            attn[t] = (attn[t].astype(jnp.float32) + delta).astype(attn[t].dtype)
+            delta = np.einsum("lhkr,lrd->lhkd", a, b) * scale
+            attn[t] = jnp.asarray(
+                np.asarray(attn[t], np.float64) + delta).astype(attn[t].dtype)
         elif t in ("w_gate", "w_up", "w_down"):
-            delta = jnp.einsum("ldr,lrf->ldf", a, b) * scale
-            mlp[t] = (mlp[t].astype(jnp.float32) + delta).astype(mlp[t].dtype)
+            delta = np.einsum("ldr,lrf->ldf", a, b) * scale
+            mlp[t] = jnp.asarray(
+                np.asarray(mlp[t], np.float64) + delta).astype(mlp[t].dtype)
     layers = dict(out["layers"])
     layers["attn"] = attn
     if mlp:

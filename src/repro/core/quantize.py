@@ -9,6 +9,8 @@ from __future__ import annotations
 
 from typing import Tuple
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
@@ -33,6 +35,34 @@ def dequantize_int4(packed: jax.Array, scale: jax.Array,
     D2 = packed.shape[-1]
     out = jnp.stack([lo, hi], axis=-1).reshape(packed.shape[:-1] + (2 * D2,))
     return (out.astype(jnp.float32) * scale).astype(dtype)
+
+
+def quantize_int4_np(x: "np.ndarray") -> Tuple["np.ndarray", "np.ndarray"]:
+    """Pure-numpy mirror of ``quantize_int4`` — bit-exact parity (same fp32
+    absmax/divide/round-half-even/clip sequence, verified in tests). Lets
+    the store quantize inserts host-side with zero device dispatches: a
+    single-item ``add`` no longer pays a jit round-trip, and on accelerators
+    the embedding batch never travels H2D just to come straight back."""
+    xf = np.asarray(x, np.float32)
+    assert xf.shape[-1] % 2 == 0, xf.shape
+    scale = np.max(np.abs(xf), axis=-1, keepdims=True) / np.float32(7.0)
+    scale = np.maximum(scale, np.float32(1e-12))
+    q = np.clip(np.rint(xf / scale), -8, 7).astype(np.int8)
+    lo, hi = q[..., 0::2], q[..., 1::2]
+    packed = (lo & np.int8(0x0F)) | (hi << 4)
+    return packed, scale
+
+
+def dequantize_int4_np(packed: "np.ndarray", scale: "np.ndarray",
+                       dtype=None) -> "np.ndarray":
+    """Pure-numpy mirror of ``dequantize_int4`` (bit-exact parity)."""
+    p = np.asarray(packed, np.int8)
+    lo = (p << 4) >> 4  # arithmetic shift sign-extends the low nibble
+    hi = p >> 4
+    D2 = p.shape[-1]
+    out = np.stack([lo, hi], axis=-1).reshape(p.shape[:-1] + (2 * D2,))
+    out = out.astype(np.float32) * np.asarray(scale, np.float32)
+    return out if dtype is None else out.astype(dtype)
 
 
 def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:

@@ -13,7 +13,11 @@ Three rounds, mirroring speculative decoding's draft→verify split:
      the live encoder in uid *batches* (one dense continuation per exit
      group, resumed from the INT4 activation cache) and matched against the
      fine-grained query embedding. Refined items are permanently upgraded in
-     the store via one ``upgrade_batch`` call.
+     the store via one ``upgrade_batch`` call. The round-3 core is
+     ``refine_round``, shared with ``QueryEngine.query_batch``: one
+     parameterized implementation of the rank-order/dedup/fallback logic
+     (``budget_mode="successes"`` = this module's retry-until-budget loop,
+     ``"attempts"`` = the drain batch's capped single round).
 
 ``refine_fn`` contract: called with an int64 uid array, it returns either a
 mapping {uid: fine_emb} covering the uids it could refine, or a
@@ -105,35 +109,93 @@ def refine_batch(refine_fn: Callable, uids: np.ndarray
     return {int(u): out[i] for i, u in enumerate(uids.tolist())}
 
 
+def refine_round(store: EmbeddingStore,
+                 uids_per_query: Sequence[np.ndarray],
+                 refine_fn: Optional[Callable],
+                 refine_budget: Optional[int] = None, *,
+                 upgrade: bool = True, budget_mode: str = "successes"
+                 ) -> Tuple[List[np.ndarray], List[int]]:
+    """Round 3 core, shared by ``speculative_retrieve`` (one query) and
+    ``QueryEngine.query_batch`` (a whole drain) — one parameterized
+    implementation of the rank-order/fallback logic that used to be
+    duplicated between them.
+
+    For each query's candidate list, the non-fine candidates are refined in
+    rank order through ``refine_batch``; a candidate pending for several
+    queries is refined ONCE (deduplicated across the batch) and counted for
+    each requesting query. Refined items are pushed to the store with a
+    single ``upgrade_batch``; fallback (coarse) embeddings are snapshotted
+    before any upgrade.
+
+    ``budget_mode``:
+      * ``"successes"`` — retry until ``refine_budget`` refinements *succeed*
+        per query (candidates past a failed one are still attempted), the
+        seed's sequential-loop semantics.
+      * ``"attempts"`` — cap *attempted* candidates per query at
+        ``refine_budget`` (one refinement round, no retries), the cheaper
+        drain-batch semantics.
+
+    Returns (per-query (m_q, E) fine/fallback matrices, per-query refine
+    counts)."""
+    if budget_mode not in ("successes", "attempts"):
+        raise ValueError(budget_mode)
+    uids_per_query = [np.asarray(u, np.int64).ravel() for u in uids_per_query]
+    fallbacks = [store.get_embeddings(u) for u in uids_per_query]
+    if refine_fn is None or not any(u.size for u in uids_per_query):
+        return fallbacks, [0] * len(uids_per_query)
+    pendings: List[np.ndarray] = []
+    for u in uids_per_query:
+        p = u[~store.is_fine(u)] if u.size else u
+        if budget_mode == "attempts" and refine_budget is not None:
+            p = p[:refine_budget]
+        pendings.append(p)
+    refined: Dict[int, np.ndarray] = {}
+    offsets = [0] * len(pendings)
+    while True:
+        want: List[int] = []
+        seen = set(refined)
+        for qi, p in enumerate(pendings):
+            if budget_mode == "attempts":
+                take = p[offsets[qi]:]
+            else:
+                budget = (p.size if refine_budget is None
+                          else min(refine_budget, p.size))
+                done = sum(1 for x in p.tolist() if int(x) in refined)
+                take = p[offsets[qi]:offsets[qi] + max(budget - done, 0)]
+            offsets[qi] += take.size
+            for x in take.tolist():
+                if x not in seen:
+                    seen.add(x)
+                    want.append(x)
+        if not want:
+            break
+        refined.update(refine_batch(refine_fn, np.asarray(want, np.int64)))
+        if budget_mode == "attempts":
+            break
+    if refined and upgrade:
+        r_uids = np.fromiter(refined.keys(), np.int64, len(refined))
+        store.upgrade_batch(r_uids, np.stack([refined[int(u)]
+                                              for u in r_uids]))
+    n_refs: List[int] = []
+    for qi, (u, embs) in enumerate(zip(uids_per_query, fallbacks)):
+        pend = set(pendings[qi].tolist())
+        n = 0
+        for j, x in enumerate(u.tolist()):
+            if x in refined and x in pend:
+                embs[j] = refined[x]
+                n += 1
+        n_refs.append(n)
+    return fallbacks, n_refs
+
+
 def _refine_round(store: EmbeddingStore, uids: np.ndarray,
                   refine_fn: Optional[Callable],
                   refine_budget: Optional[int], upgrade: bool
                   ) -> Tuple[np.ndarray, int]:
-    """Round 3 core: batched refinement of the non-fine candidates in rank
-    order until ``refine_budget`` refinements succeed (like the seed's
-    sequential loop, candidates past a failed one are still attempted).
-    Returns the (m, E) fine/fallback embedding matrix and the refine count."""
-    fine_embs = store.get_embeddings(uids)  # pre-upgrade coarse fallbacks
-    if refine_fn is None or uids.size == 0:
-        return fine_embs, 0
-    pending = uids[~store.is_fine(uids)]
-    budget = pending.size if refine_budget is None else min(refine_budget,
-                                                            pending.size)
-    refined: Dict[int, np.ndarray] = {}
-    i = 0
-    while len(refined) < budget and i < pending.size:
-        chunk = pending[i:i + (budget - len(refined))]
-        i += chunk.size
-        refined.update(refine_batch(refine_fn, chunk))
-    if refined:
-        r_uids = np.fromiter(refined.keys(), np.int64, len(refined))
-        r_embs = np.stack([refined[int(u)] for u in r_uids])
-        if upgrade:
-            store.upgrade_batch(r_uids, r_embs)
-        pos = {int(u): j for j, u in enumerate(uids.tolist())}
-        for u, e in zip(r_uids.tolist(), r_embs):
-            fine_embs[pos[u]] = e
-    return fine_embs, len(refined)
+    """Single-query wrapper over ``refine_round`` (seed semantics)."""
+    embs, n = refine_round(store, [uids], refine_fn, refine_budget,
+                           upgrade=upgrade, budget_mode="successes")
+    return embs[0], n[0]
 
 
 def speculative_retrieve(

@@ -21,10 +21,16 @@ single jnp call instead of one device round-trip per item. Reads snapshot
 seed's torn row/metadata races; the search scan itself runs outside the lock
 so queries don't serialize inserts (see ``_search_snapshot``).
 
-``search_batch`` is the serving hot path: on accelerators it dispatches a
-(Q, E) query batch to the fused Pallas ``retrieval_topk`` kernel so the full
-(Q, N) score matrix never materializes; on CPU (where the kernel only runs
-in interpret mode) ``impl='auto'`` cuts over to the numpy matmul path.
+``search_batch`` is the serving hot path. On accelerators ``impl='auto'``
+resolves to the *device-resident* path: the int4 slab lives on-device as a
+``DeviceBank`` (see ``repro.core.device_bank``), refreshed incrementally
+from the dirty-row bitmap — zero full-slab H2D uploads after warm-up — and
+scanned by the fused dequant-top-k kernel so neither the fp32 bank nor the
+(Q, N) score matrix ever materializes. On CPU ``impl='auto'`` cuts over to
+the numpy matmul path (the interpret-mode kernel loses to BLAS); the device
+path still works there (``impl='device'``) and is what the tests exercise.
+Quantization for inserts runs on the pure-numpy parity path
+(``quantize_int4_np``): no device dispatch per ``add``/``add_batch``.
 Queried items are permanently upgraded to fine-grained embeddings (§5.3
 "web cookie" rule) via ``upgrade``/``upgrade_batch``.
 """
@@ -39,7 +45,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.quantize import dequantize_int4, quantize_int4
+from repro.core.quantize import (dequantize_int4, quantize_int4,
+                                 quantize_int4_np)
 
 _META_DTYPE = np.dtype([("uid", np.int64), ("exit_idx", np.int32),
                         ("exit_layer", np.int32), ("fine", np.bool_),
@@ -73,7 +80,16 @@ class EmbeddingStore:
         self._dense = np.zeros((self._cap, embed_dim), np.float32)
         self._dirty = np.zeros(self._cap, np.bool_)
         self._any_dirty = False
+        # second dirty bitmap, consumed by the device bank's incremental
+        # refresh (the dense cache and the bank sync independently)
+        self._bank_dirty = np.zeros(self._cap, np.bool_)
+        self._any_bank_dirty = False
+        self._bank = None  # DeviceBank, created lazily / via attach
         self._escaped_n = 0  # rows visible to views handed out to readers
+        # re-upload accounting for the non-resident kernel paths (the bytes
+        # the device bank exists to eliminate; see benchmarks/store_scale.py)
+        self.upload_bytes = 0
+        self.upload_calls = 0
         self._uid_to_row: Dict[int, int] = {}
         self._modalities: List[str] = [""]  # interned names; id 0 = unset
         # (packed, scale, shape, exit_layer) per uid; packed is (S, d//2) int8
@@ -95,7 +111,8 @@ class EmbeddingStore:
         cap = self._cap
         while cap < n_needed:
             cap *= 2
-        for name in ("_packed", "_scales", "_meta", "_dense", "_dirty"):
+        for name in ("_packed", "_scales", "_meta", "_dense", "_dirty",
+                     "_bank_dirty"):
             old = getattr(self, name)
             new = np.zeros((cap,) + old.shape[1:], old.dtype)
             new[:self._n] = old[:self._n]
@@ -104,10 +121,11 @@ class EmbeddingStore:
         self._escaped_n = 0  # the fresh dense buffer has no outside readers
 
     def _quantize_rows(self, embs: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
-        """(B, E) fp32 -> (packed rows, scales) in ONE device call."""
+        """(B, E) fp32 -> (packed rows, scales), host-side: the numpy path is
+        bit-exact with ``quantize_int4`` and costs zero device dispatches
+        (a per-item ``add`` used to pay a jit round-trip here)."""
         if self.store_int4:
-            p, s = quantize_int4(jnp.asarray(embs))
-            return np.asarray(p), np.asarray(s)
+            return quantize_int4_np(embs)
         return embs, np.ones((len(embs), 1), np.float32)
 
     # -- mutation ------------------------------------------------------------
@@ -132,8 +150,8 @@ class EmbeddingStore:
         act = None
         if cached_hs is not None:
             ch = np.asarray(cached_hs, np.float32)  # (B, ..., d)
-            p, s = quantize_int4(jnp.asarray(ch))
-            act = (np.asarray(p), np.asarray(s), tuple(ch.shape[1:]))
+            p, s = quantize_int4_np(ch)  # host-side, parity with jnp path
+            act = (p, s, tuple(ch.shape[1:]))
         exit_idxs = np.asarray(exit_idxs, np.int32).ravel()
         exit_layers = np.asarray(exit_layers, np.int32).ravel()
         with self._lock:
@@ -161,6 +179,8 @@ class EmbeddingStore:
             self._meta["fine"][rows] = fine
             self._dirty[rows] = True
             self._any_dirty = True
+            self._bank_dirty[rows] = True
+            self._any_bank_dirty = True
             if act is not None:
                 ap, ascale, shape = act
                 for j, u in enumerate(uids.tolist()):
@@ -188,6 +208,8 @@ class EmbeddingStore:
             self._meta["fine"][rows] = True
             self._dirty[rows] = True
             self._any_dirty = True
+            self._bank_dirty[rows] = True
+            self._any_bank_dirty = True
             for u in uids.tolist():
                 self._act_cache.pop(u, None)  # §3.4: storage freed once refined
 
@@ -317,6 +339,49 @@ class EmbeddingStore:
         with self._lock:
             return int(uid) in self._act_cache
 
+    # -- device bank ---------------------------------------------------------
+
+    def attach_device_bank(self, devices=None, *, impl: str = "auto",
+                           block_n: int = 4096):
+        """Create (or replace) the device-resident searchable bank. ``devices``
+        defaults to all of ``jax.devices()`` — rows are sharded across them
+        when there is more than one. Existing rows are marked for upload on
+        the next sync (the warm-up transfer); after that only dirty rows
+        travel. Returns the bank (see ``repro.core.device_bank``)."""
+        from repro.core.device_bank import DeviceBank
+        with self._lock:
+            self._bank = DeviceBank(self.embed_dim,
+                                    store_int4=self.store_int4,
+                                    devices=devices, impl=impl,
+                                    block_n=block_n)
+            self._bank_dirty[:self._n] = True
+            self._any_bank_dirty = self._n > 0
+            return self._bank
+
+    @property
+    def device_bank(self):
+        """The attached DeviceBank, or None."""
+        return self._bank
+
+    def _sync_bank_locked(self):
+        """Refresh the device bank under the mutation lock: scatter only the
+        rows dirtied since the last sync (the bank grows device-side in
+        lockstep with host slab doublings). Returns (n, uid snapshot, bank,
+        bank state) taken atomically with the sync — the consistency point
+        the scan is pinned to (a concurrent later sync, or a bank
+        re-attach, must not retarget it)."""
+        if self._bank is None:
+            self.attach_device_bank()
+        bank = self._bank
+        if self._any_bank_dirty:  # steady-state queries skip the O(N) scan
+            rows = np.nonzero(self._bank_dirty[:self._n])[0]
+            self._bank_dirty[:self._n] = False
+            self._any_bank_dirty = False
+        else:
+            rows = np.zeros((0,), np.int64)
+        state = bank.sync(self._packed, self._scales, self._n, rows)
+        return self._n, self._meta["uid"][:self._n].copy(), bank, state
+
     # -- search --------------------------------------------------------------
 
     def _search_snapshot(self) -> Tuple[np.ndarray, int, np.ndarray]:
@@ -350,19 +415,33 @@ class EmbeddingStore:
         """Fused batched top-k over the whole store: queries (Q, E) ->
         (uids (Q, k), scores (Q, k)), both sorted by descending score.
 
-        ``impl='auto'`` picks the compiled Pallas ``retrieval_topk`` kernel
-        on accelerators and the numpy matmul+argpartition host path on CPU
-        (where the kernel only runs in interpret mode, ~10x slower — see
-        BENCH_store_scale.json). ``impl='pallas'``/``'xla'``/``'numpy'``
-        force a backend. Scores are raw inner products (normalize=False) to
-        match ``search``."""
+        ``impl='auto'`` picks the device-resident bank on accelerators
+        (``'device'``: int4 slab stays on device, incremental dirty-row
+        refresh, fused dequant scan — zero slab re-upload per query) and the
+        numpy matmul+argpartition host path on CPU (where the kernel only
+        runs in interpret mode, ~10x slower — see BENCH_store_scale.json;
+        the device path works on CPU too, it just loses to BLAS).
+        ``impl='device'``/``'pallas'``/``'xla'``/``'numpy'`` force a
+        backend; the latter two re-upload the fp32 slab every call. Scores
+        are raw inner products (normalize=False) to match ``search``."""
         queries = np.asarray(queries, np.float32).reshape(-1, self.embed_dim)
         nq = len(queries)
         if self._n == 0 or nq == 0:
             return (np.zeros((nq, 0), np.int64),
                     np.zeros((nq, 0), np.float32))
-        if impl == "auto" and jax.default_backend() == "cpu":
-            impl = "numpy"  # interpret-mode kernel loses to the host matmul
+        if impl == "auto":
+            # CPU: interpret-mode kernel loses to the host matmul; elsewhere
+            # the device-resident bank eliminates the per-query H2D upload
+            impl = "numpy" if jax.default_backend() == "cpu" else "device"
+        if impl == "device":
+            with self._lock:
+                n, uids, bank, state = self._sync_bank_locked()
+            # the scan runs outside the lock, pinned to the sync-point bank
+            # AND snapshot (immutable arrays; a racing sync or re-attach
+            # publishes/installs the NEXT one), so row indices stay aligned
+            # with the uid copy
+            idx, top_s = bank.search(queries, min(k, n), state=state, **kw)
+            return uids[idx], top_s
         slab, n, uids = self._search_snapshot()
         k = min(k, n)
         if impl == "numpy":
@@ -377,6 +456,8 @@ class EmbeddingStore:
             # hand the kernel the whole capacity slab + a runtime row count:
             # the traced bank shape then changes only on slab doublings
             # (O(log N) compiles), not once per store size
+            self.upload_bytes += int(slab.nbytes)  # full fp32 slab, per call
+            self.upload_calls += 1
             s, i = retrieval_topk(jnp.asarray(queries), jnp.asarray(slab),
                                   k, normalize=False, impl=impl, n_valid=n,
                                   **kw)

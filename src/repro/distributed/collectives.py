@@ -14,6 +14,10 @@ the §Perf iterations and the distributed-optimization features:
   sharded along sequence: each shard computes partial (max, sum, o) and the
   three scalars are combined with one tiny psum (flash-decoding across
   chips) instead of all-gathering the KV cache.
+* ``topk_allgather_merge`` — distributed retrieval merge: each shard scans
+  its slice of the embedding bank and contributes a (Q, k) candidate set;
+  one small all-gather of the k winners (never the bank or the scores
+  matrix) + a local re-top-k yields the replicated global result.
 """
 from __future__ import annotations
 
@@ -36,6 +40,20 @@ def psum_scatter_tree(tree, axis_name: str):
             return jax.lax.psum(g, axis_name)
         return jax.lax.psum_scatter(g, axis_name, scatter_dimension=0, tiled=True)
     return jax.tree.map(f, tree)
+
+
+def topk_allgather_merge(scores: jax.Array, ids: jax.Array, k: int,
+                         axis_name: str) -> Tuple[jax.Array, jax.Array]:
+    """Inside shard_map: merge per-shard top-k candidate sets.
+
+    ``scores``/``ids`` are this shard's (Q, k_local) best scores and *global*
+    ids over its bank slice. Wire cost is one all-gather of 2·Q·k_local
+    words per shard — independent of bank size. Returns the replicated
+    global (Q, k) result, sorted by descending score."""
+    all_s = jax.lax.all_gather(scores, axis_name, axis=1, tiled=True)
+    all_i = jax.lax.all_gather(ids, axis_name, axis=1, tiled=True)
+    top_s, sel = jax.lax.top_k(all_s, k)
+    return top_s, jnp.take_along_axis(all_i, sel, axis=1)
 
 
 def compressed_psum(tree, axis_name: str, error_state=None):

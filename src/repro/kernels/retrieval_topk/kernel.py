@@ -60,6 +60,94 @@ def _topk_kernel(n_ref, q_ref, b_ref, s_out, i_out, best_s, best_i, *,
         i_out[...] = best_i[...]
 
 
+def _topk_int4_kernel(n_ref, q_ref, p_ref, sc_ref, s_out, i_out, best_s,
+                      best_i, *, k: int, block_n: int, nn: int,
+                      normalize: bool):
+    """Fused dequant-and-scan: the bank block arrives as packed int4 nibbles
+    (bn, E//2) + per-row scales (bn, 1) and is dequantized in VMEM right
+    before the matmul — the fp32 bank never exists in HBM, so bank traffic
+    is 8x lower than the dense kernel (int4 vs fp32)."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        best_s[...] = jnp.full_like(best_s, NEG_INF)
+        best_i[...] = jnp.zeros_like(best_i)
+
+    q = q_ref[...].astype(jnp.float32)              # (bq, E)
+    p = p_ref[...]                                  # (bn, E//2) int8
+    lo = (p << 4) >> 4   # arithmetic shift sign-extends the low nibble
+    hi = p >> 4
+    bn, D2 = p.shape
+    b = jnp.stack([lo, hi], axis=-1).reshape(bn, 2 * D2).astype(jnp.float32)
+    b = b * sc_ref[...]                             # (bn, E) fp32, in VMEM only
+    if normalize:
+        q = q * jax.lax.rsqrt(jnp.maximum(jnp.sum(q * q, -1, keepdims=True), 1e-16))
+        b = b * jax.lax.rsqrt(jnp.maximum(jnp.sum(b * b, -1, keepdims=True), 1e-16))
+    s = jax.lax.dot_general(q, b, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (bq, bn)
+    ids = j * block_n + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(ids < n_ref[0], s, NEG_INF)
+
+    cat_s = jnp.concatenate([best_s[...], s], axis=1)
+    cat_i = jnp.concatenate([best_i[...], ids], axis=1)
+    new_s, sel = jax.lax.top_k(cat_s, k)
+    best_s[...] = new_s
+    best_i[...] = jnp.take_along_axis(cat_i, sel, axis=1)
+
+    @pl.when(j == nn - 1)
+    def _final():
+        s_out[...] = best_s[...]
+        i_out[...] = best_i[...]
+
+
+def retrieval_topk_int4_pallas(query: jax.Array, packed: jax.Array,
+                               scales: jax.Array, k: int, *,
+                               normalize: bool = False, block_q: int = 128,
+                               block_n: int = 1024,
+                               interpret: Optional[bool] = None,
+                               n_valid=None) -> Tuple[jax.Array, jax.Array]:
+    """Packed-int4 variant of ``retrieval_topk_pallas``: ``packed`` is the
+    (N, E//2) int8 nibble slab, ``scales`` the (N, 1) per-row absmax scales
+    (``repro.core.quantize.quantize_int4`` layout). Same capacity-padding
+    contract as the dense kernel (``n_valid`` masks rows past the fill)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    Q, E2 = query.shape[0], packed.shape[1]
+    N = packed.shape[0]
+    bq = min(block_q, Q)
+    bn = min(block_n, N)
+    padq = (-Q) % bq
+    padn = (-N) % bn
+    if padq:
+        query = jnp.pad(query, ((0, padq), (0, 0)))
+    if padn:
+        packed = jnp.pad(packed, ((0, padn), (0, 0)))
+        scales = jnp.pad(scales, ((0, padn), (0, 0)))
+    nq = query.shape[0] // bq
+    nn = packed.shape[0] // bn
+    n_arr = jnp.full((1,), N if n_valid is None else n_valid, jnp.int32)
+    kernel = functools.partial(_topk_int4_kernel, k=k, block_n=bn, nn=nn,
+                               normalize=normalize)
+    scores, ids = pl.pallas_call(
+        kernel,
+        grid=(nq, nn),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM) if pltpu is not None
+                  else pl.BlockSpec((1,), lambda i, j: (0,)),
+                  pl.BlockSpec((bq, query.shape[1]), lambda i, j: (i, 0)),
+                  pl.BlockSpec((bn, E2), lambda i, j: (j, 0)),
+                  pl.BlockSpec((bn, 1), lambda i, j: (j, 0))],
+        out_specs=[pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+                   pl.BlockSpec((bq, k), lambda i, j: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((query.shape[0], k), jnp.float32),
+                   jax.ShapeDtypeStruct((query.shape[0], k), jnp.int32)],
+        scratch_shapes=[_VMEM((bq, k), jnp.float32),
+                        _VMEM((bq, k), jnp.int32)],
+        interpret=interpret,
+    )(n_arr, query, packed, scales)
+    return scores[:Q], ids[:Q]
+
+
 def retrieval_topk_pallas(query: jax.Array, bank: jax.Array, k: int, *,
                           normalize: bool = True, block_q: int = 128,
                           block_n: int = 1024,

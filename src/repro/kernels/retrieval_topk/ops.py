@@ -1,11 +1,16 @@
-"""Dispatch wrapper for fused retrieval top-k.
+"""Dispatch wrappers for fused retrieval top-k.
 
-``impl`` selects the backend:
+``retrieval_topk`` scans a dense fp32 bank; ``impl`` selects the backend:
   * ``"auto"`` (default) — Pallas kernel when importable (interpret mode on
     CPU, compiled on TPU), else the jnp/XLA reference.
   * ``"pallas"`` — force the Pallas kernel; ``interpret=None`` auto-detects
     (interpret off only on TPU).
   * ``"xla"`` — force the jnp reference (normalize → matmul → lax.top_k).
+
+``retrieval_topk_int4`` scans a *packed int4* bank (the device-resident
+DeviceBank path) with in-flight dequantization — the fp32 bank never
+materializes: ``"pallas"`` dequantizes in VMEM, ``"xla"`` is a blocked jnp
+scan compiled everywhere, ``"ref"`` the dequant-all oracle.
 """
 from __future__ import annotations
 
@@ -15,16 +20,20 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.retrieval_topk.ref import retrieval_topk_reference
+from repro.kernels.retrieval_topk.ref import (retrieval_topk_int4_blocked,
+                                              retrieval_topk_int4_reference,
+                                              retrieval_topk_reference)
 
 try:
     from repro.kernels.retrieval_topk import kernel as _kernel
     retrieval_topk_pallas = _kernel.retrieval_topk_pallas
+    retrieval_topk_int4_pallas = _kernel.retrieval_topk_int4_pallas
     # kernel.py imports with _VMEM=None when pallas.tpu is missing; the
     # pallas_call scratch_shapes would then crash, so treat it as absent
     _HAS_PALLAS = _kernel._VMEM is not None
 except Exception:  # pragma: no cover — pallas not in this jax build
     retrieval_topk_pallas = None
+    retrieval_topk_int4_pallas = None
     _HAS_PALLAS = False
 
 
@@ -82,3 +91,66 @@ def retrieval_topk(query: jax.Array, bank: jax.Array, k: int, *,
                         jnp.int32)
     return _jitted(impl, k, normalize,
                    tuple(sorted(kw.items())))(query, bank, n_arr)
+
+
+# ---------------------------------------------------------------------------
+# Packed-int4 fused dequant-and-scan (device-resident bank path)
+# ---------------------------------------------------------------------------
+
+
+def default_int4_impl() -> str:
+    backend = jax.default_backend()
+    if backend == "tpu" and _HAS_PALLAS:
+        return "pallas"      # in-VMEM dequant, int4 HBM traffic
+    return "xla"             # blocked jnp scan compiles everywhere and never
+    #                          materializes the fp32 bank (see ref.py)
+
+
+@functools.lru_cache(maxsize=128)
+def _jitted_int4(impl: str, k: int, normalize: bool, kw: tuple):
+    if impl == "pallas":
+        def fn(query, packed, scales, n_valid):
+            return retrieval_topk_int4_pallas(query, packed, scales, k,
+                                              normalize=normalize,
+                                              n_valid=n_valid, **dict(kw))
+    elif impl == "xla":
+        def fn(query, packed, scales, n_valid):
+            return retrieval_topk_int4_blocked(query, packed, scales, k,
+                                               normalize=normalize,
+                                               n_valid=n_valid, **dict(kw))
+    else:
+        def fn(query, packed, scales, n_valid):
+            return retrieval_topk_int4_reference(query, packed, scales, k,
+                                                 normalize=normalize,
+                                                 n_valid=n_valid)
+    return jax.jit(fn)
+
+
+def retrieval_topk_int4(query: jax.Array, packed: jax.Array,
+                        scales: jax.Array, k: int, *,
+                        normalize: bool = False, impl: str = "auto",
+                        interpret: Optional[bool] = None,
+                        n_valid: Optional[int] = None,
+                        **kw) -> Tuple[jax.Array, jax.Array]:
+    """Fused top-k over a packed int4 bank: ``packed`` (N, E//2) int8 nibble
+    rows + ``scales`` (N, 1) per-row absmax (``quantize_int4`` layout). The
+    fp32 bank is never materialized: rows dequantize block-wise right before
+    scoring. ``impl``: 'pallas' (TPU kernel / interpret), 'xla' (blocked jnp
+    scan, compiled everywhere), 'ref' (dequant-all oracle), or 'auto'."""
+    if impl in (None, "auto"):
+        impl = default_int4_impl()
+    if impl == "pallas":
+        if not _HAS_PALLAS:
+            raise RuntimeError("retrieval_topk_int4 impl='pallas' requested "
+                               "but the Pallas kernel is unavailable in this "
+                               "jax build; use impl='auto' or 'xla'")
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        kw = dict(kw, interpret=interpret)
+    elif impl not in ("xla", "ref"):
+        raise ValueError(f"unknown retrieval_topk_int4 impl: {impl!r}")
+    n_arr = jnp.asarray(packed.shape[0] if n_valid is None else n_valid,
+                        jnp.int32)
+    return _jitted_int4(impl, k, normalize,
+                        tuple(sorted(kw.items())))(query, packed, scales,
+                                                   n_arr)

@@ -26,3 +26,71 @@ def retrieval_topk_reference(query: jax.Array, bank: jax.Array, k: int, *,
         sims = jnp.where(live, sims, -1e30)
     scores, ids = jax.lax.top_k(sims, k)
     return scores, ids.astype(jnp.int32)
+
+
+def retrieval_topk_int4_reference(query: jax.Array, packed: jax.Array,
+                                  scales: jax.Array, k: int, *,
+                                  normalize: bool = False, n_valid=None
+                                  ) -> Tuple[jax.Array, jax.Array]:
+    """Oracle for the packed-int4 fused scan: dequantize the whole slab,
+    then run the dense reference. Materializes the fp32 bank — correctness
+    baseline only; the streaming paths live in ops.py / kernel.py."""
+    from repro.core.quantize import dequantize_int4
+    bank = dequantize_int4(packed, scales)
+    return retrieval_topk_reference(query, bank, k, normalize=normalize,
+                                    n_valid=n_valid)
+
+
+def retrieval_topk_int4_blocked(query: jax.Array, packed: jax.Array,
+                                scales: jax.Array, k: int, *,
+                                normalize: bool = False, block_n: int = 4096,
+                                block_q: int = 0,
+                                n_valid=None) -> Tuple[jax.Array, jax.Array]:
+    """Compiled (jnp/XLA) streaming scan over the packed slab: dequantize one
+    row block at a time, score it, and merge into a running (Q, k) best set —
+    the fp32 bank never materializes (the dequantized block stays
+    cache/VMEM-sized). This is the device-resident search path on backends
+    where the Pallas kernel can't compile (GPU) or loses to XLA (CPU).
+    ``block_q`` is accepted for signature parity with the Pallas kernel's
+    tuning knobs but unused — this scan doesn't tile the query batch."""
+    del block_q
+    q = query.astype(jnp.float32)
+    if normalize:
+        q = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-8)
+    N = packed.shape[0]
+    bn = min(block_n, N)
+    pad = (-N) % bn
+    if pad:
+        packed = jnp.pad(packed, ((0, pad), (0, 0)))
+        scales = jnp.pad(scales, ((0, pad), (0, 0)))
+    n_arr = jnp.asarray(N if n_valid is None else n_valid, jnp.int32)
+    nn = packed.shape[0] // bn
+    Q = q.shape[0]
+    lo = (packed << 4) >> 4  # sign-extend low nibble (arithmetic shift)
+    hi = packed >> 4
+
+    def body(carry, xs):
+        best_s, best_i = carry
+        lo_b, hi_b, sc_b, j = xs
+        D2 = lo_b.shape[-1]
+        b = jnp.stack([lo_b, hi_b], axis=-1).reshape(bn, 2 * D2)
+        b = b.astype(jnp.float32) * sc_b
+        if normalize:
+            b = b / jnp.maximum(jnp.linalg.norm(b, axis=-1, keepdims=True),
+                                1e-8)
+        s = q @ b.T                                              # (Q, bn)
+        ids = j * bn + jnp.arange(bn, dtype=jnp.int32)[None, :]
+        s = jnp.where(ids < n_arr, s, -1e30)
+        cat_s = jnp.concatenate([best_s, s], axis=1)
+        cat_i = jnp.concatenate([best_i, jnp.broadcast_to(ids, s.shape)],
+                                axis=1)
+        new_s, sel = jax.lax.top_k(cat_s, k)
+        return (new_s, jnp.take_along_axis(cat_i, sel, axis=1)), None
+
+    init = (jnp.full((Q, k), -1e30, jnp.float32),
+            jnp.zeros((Q, k), jnp.int32))
+    (scores, ids), _ = jax.lax.scan(
+        body, init, (lo.reshape(nn, bn, -1), hi.reshape(nn, bn, -1),
+                     scales.reshape(nn, bn, 1),
+                     jnp.arange(nn, dtype=jnp.int32)))
+    return scores, ids

@@ -27,7 +27,8 @@ from repro.serving.query import QueryEngine
 
 
 def build_service(spec, *, n_train: int = 256, seed: int = 0, policy="recall",
-                  params=None, lora=None, fw_kw=None):
+                  params=None, lora=None, fw_kw=None, search_impl="auto",
+                  search_devices=None):
     """Train the pre-exit predictor from self-supervised labels, then stand up
     the embedding + query engines."""
     cfg, recall = spec.model, spec.recall
@@ -56,7 +57,8 @@ def build_service(spec, *, n_train: int = 256, seed: int = 0, policy="recall",
                              store=store, fw_kw=fw_kw)
     query = QueryEngine(params, cfg, recall, store=store,
                         refine_fn=engine.refine_fn(), query_modality="text",
-                        lora=lora, fw_kw=fw_kw)
+                        lora=lora, fw_kw=fw_kw, search_impl=search_impl,
+                        search_devices=search_devices)
     return engine, query, {"predictor": stats, "labels": np.asarray(labels)}
 
 
@@ -71,12 +73,25 @@ def main():
     ap.add_argument("--per-query", action="store_true",
                     help="serve queries one at a time instead of one "
                          "query_batch drain")
+    ap.add_argument("--search-impl", default="auto",
+                    choices=["auto", "numpy", "pallas", "xla", "device"],
+                    help="store scan backend; 'device' keeps the int4 slab "
+                         "resident on device (auto picks it on accelerators) "
+                         "and shards it across --search-shards devices")
+    ap.add_argument("--search-shards", type=int, default=0,
+                    help="shard the device bank across this many devices "
+                         "(0 = all local devices when --search-impl=device)")
     args = ap.parse_args()
 
     spec = get_arch(args.arch)
     if args.smoke:
         spec = smoke_variant(spec)
-    engine, query, info = build_service(spec, policy=args.policy)
+    devices = None
+    if args.search_impl == "device" and args.search_shards:
+        devices = jax.devices()[:args.search_shards]
+    engine, query, info = build_service(spec, policy=args.policy,
+                                        search_impl=args.search_impl,
+                                        search_devices=devices)
     print(f"predictor: {info['predictor']}")
 
     data = SYN.multimodal_pairs(1, args.n_items, spec.model)
@@ -103,6 +118,8 @@ def main():
           f"({dt / nq * 1e3:.0f} ms/query host), "
           f"{sum(r.n_refined for r in results)} refinements")
     print(f"R@1 (untrained model, sanity only): {hits / nq:.2f}")
+    if engine.store.device_bank is not None:
+        print(f"device bank: {engine.store.device_bank.stats()}")
 
 
 if __name__ == "__main__":

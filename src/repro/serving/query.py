@@ -28,8 +28,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import MEMConfig, RecallConfig
-from repro.core.retrieval import (RetrievalResult, refine_batch,
-                                  global_verify, single_granularity_retrieve,
+from repro.core.retrieval import (RetrievalResult, global_verify,
+                                  refine_round, single_granularity_retrieve,
                                   speculative_retrieve)
 from repro.core.store import EmbeddingStore
 
@@ -39,7 +39,8 @@ class QueryEngine:
                  store: EmbeddingStore,
                  refine_fn: Optional[Callable] = None,
                  query_modality: str = "text", lora=None,
-                 fw_kw: Optional[dict] = None, search_impl: str = "auto"):
+                 fw_kw: Optional[dict] = None, search_impl: str = "auto",
+                 search_devices=None):
         from repro.models import imagebind as IB
         self.params, self.cfg, self.recall = params, cfg, recall
         self.store = store
@@ -48,6 +49,15 @@ class QueryEngine:
         self.lora = lora
         self.fw_kw = fw_kw or {}
         self.search_impl = search_impl
+        # device-resident bank: attach eagerly so the warm-up upload happens
+        # at engine construction, not on the first query. An explicit device
+        # list always (re)attaches — a bank auto-attached earlier over
+        # different devices must not silently win over the caller's request.
+        if search_devices is not None:
+            store.attach_device_bank(search_devices)
+            self.search_impl = "device"
+        elif search_impl == "device" and store.device_bank is None:
+            store.attach_device_bank()
         t = cfg.tower(query_modality)
         exits = recall.exit_layers(t.n_layers)
         k = recall.query_granularities
@@ -129,43 +139,18 @@ class QueryEngine:
         t2 = time.perf_counter()
 
         # round 3: one deduplicated refinement batch across all queries
-        pending_per_q: List[np.ndarray] = []
-        for uids_b, _ in cands:
-            if self.refine_fn is None or uids_b.size == 0:
-                pending_per_q.append(np.zeros((0,), np.int64))
-                continue
-            p = uids_b[~self.store.is_fine(uids_b)]
-            pending_per_q.append(p if refine_budget is None
-                                 else p[:refine_budget])
-        # coarse fallbacks snapshotted before any upgrade
-        fallbacks = [self.store.get_embeddings(u) for u, _ in cands]
-        union: List[int] = []
-        seen = set()
-        for p in pending_per_q:
-            for u in p.tolist():
-                if u not in seen:
-                    seen.add(u)
-                    union.append(u)
-        refined: Dict[int, np.ndarray] = {}
-        if union:
-            refined = refine_batch(self.refine_fn,
-                                   np.asarray(union, np.int64))
-            if refined:
-                r_uids = np.fromiter(refined.keys(), np.int64, len(refined))
-                self.store.upgrade_batch(
-                    r_uids, np.stack([refined[int(u)] for u in r_uids]))
+        # (shared retrieval.refine_round core; "attempts" = per-query budget
+        # caps attempted candidates, no retry loop)
+        fine_per_q, n_ref_per_q = refine_round(
+            self.store, [u for u, _ in cands], self.refine_fn, refine_budget,
+            upgrade=True, budget_mode="attempts")
         t3 = time.perf_counter()
 
         ranked = []
         for b in range(B):
             uids_b, _ = cands[b]
-            fine_embs = fallbacks[b]
-            pend = set(pending_per_q[b].tolist())
-            n_ref = 0
-            for j, u in enumerate(uids_b.tolist()):
-                if u in refined and u in pend:
-                    fine_embs[j] = refined[u]
-                    n_ref += 1
+            fine_embs = fine_per_q[b]
+            n_ref = n_ref_per_q[b]
             if len(fine_embs):
                 scores = fine_embs @ fine_q[b]
                 order = np.argsort(-scores)[:final_k]

@@ -147,7 +147,9 @@ def test_lora_merge_equals_on_the_fly(setup):
     o1 = T.forward_hidden(params, CFG, rc, tokens=tokens, lora=lora, **FW)["h"]
     o2 = T.forward_hidden(PL.merge_lora(params, lora, rc), CFG, rc,
                           tokens=tokens, **FW)["h"]
-    np.testing.assert_allclose(o1, o2, atol=2e-3)
+    # merged weights are exact to one fp32 ulp (float64 merge); the residual
+    # is fp32 forward reassociation, which scales with |h| — hence the rtol
+    np.testing.assert_allclose(o1, o2, atol=2e-3, rtol=5e-4)
 
 
 def test_lora_zero_init_is_identity(setup):
