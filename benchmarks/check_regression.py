@@ -40,6 +40,14 @@ THROUGHPUT_KEYS = (
     "qps_sharded",   # None unless run with >1 visible device
 )
 
+# higher-is-better metrics from the top-level mixed mutate+scan phase
+# (store_scale additionally hard-asserts mixed_async_speedup >= 1.5)
+MIXED_KEYS = (
+    "mixed_scan_qps_sync",
+    "mixed_scan_qps_async",
+    "mixed_async_speedup",
+)
+
 
 def compare(fresh: dict, base: dict, threshold: float = THRESHOLD):
     """Returns (regressions, checked): lists of (n, key, base, fresh, ratio)."""
@@ -54,6 +62,19 @@ def compare(fresh: dict, base: dict, threshold: float = THRESHOLD):
                 continue
             ratio = row[key] / ref[key]
             entry = (row["n"], key, ref[key], row[key], ratio)
+            checked.append(entry)
+            if ratio < 1.0 - threshold:
+                regressions.append(entry)
+    fm, bm = fresh.get("mixed") or {}, base.get("mixed") or {}
+    # mixed-phase rows are comparable only when both runs used the same
+    # trace scale (quick runs shrink it with --sizes)
+    if fm.get("mixed_start_n") == bm.get("mixed_start_n"):
+        for key in MIXED_KEYS:
+            if not fm.get(key) or not bm.get(key):
+                continue
+            ratio = fm[key] / bm[key]
+            entry = (fm.get("mixed_final_n", 0), key, bm[key], fm[key],
+                     ratio)
             checked.append(entry)
             if ratio < 1.0 - threshold:
                 regressions.append(entry)

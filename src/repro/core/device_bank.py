@@ -22,24 +22,36 @@ makes the *quantized* slab itself the searchable index:
 
 Refresh protocol & consistency
 ------------------------------
-``DeviceBank`` is not thread-safe on its own; ``EmbeddingStore`` drives it
-under the same lock as slab mutations:
+``DeviceBank`` is not thread-safe on its own; refreshes are serialized by
+the caller (``EmbeddingStore`` under its mutation lock in sync mode, or a
+single ``RefreshScheduler`` epoch at a time in async mode — see
+``repro.core.bank_refresh``):
 
   1. The store keeps a per-bank dirty bitmap (``_bank_dirty``) set by
-     ``add_batch`` / ``upgrade_batch`` alongside the dense-cache dirty bits.
-  2. ``search_batch(impl='device')`` calls ``sync`` under the store lock:
-     capacity is doubled on device if the host slab grew, the dirty rows'
-     packed nibbles + scales are scattered, the bitmap is cleared, and the
-     uid snapshot is taken — all atomically with respect to writers.
-  3. The scan itself runs OUTSIDE the lock: ``search`` reads the
-     (packed, scales, n) triple as ONE atomically-published tuple, and the
-     arrays inside are immutable — a sync racing the scan can only publish
-     the *next* snapshot, so an in-flight query sees a stale-but-matched
-     snapshot, never torn rows or mismatched slab halves.
+     ``add_batch`` / ``upgrade_batch`` / ``delete_batch`` alongside the
+     dense-cache dirty bits.
+  2. A refresh is split into two phases so it can run double-buffered:
+     ``apply_rows`` builds the *shadow* snapshot (device-side capacity
+     doubling if the host slab grew, then a scatter of the dirty rows'
+     packed nibbles + scales — async ``device_put`` of just those rows)
+     WITHOUT touching the published state, and ``publish`` flips the
+     published pointer to it in one atomic attribute write. ``sync`` is
+     the fused convenience (apply + publish) used by the in-lock path.
+  3. The scan runs with no lock at all: ``search`` reads one
+     ``BankSnapshot`` (packed, scales, n, uids, generation) atomically,
+     and the arrays inside are immutable — a concurrent flip can only
+     install the *next* snapshot, so an in-flight query sees a
+     stale-but-matched generation, never torn rows or mismatched halves.
 
-Hence the guarantee: after ``sync`` returns, the device bank row i equals
-the host slab row i bit-exactly for every i < n at the sync point, and a
-query between syncs sees exactly the state of some previous sync.
+Hence the guarantee: after a flip, device bank row i equals the host slab
+row i bit-exactly for every i < n at that epoch's begin point, and every
+query sees exactly the state of ONE published generation.
+
+Double buffering & donation: the scatter into the shadow never mutates the
+published buffers (publishing is copy-on-write), so scans overlap refreshes
+freely. When the refresh grew capacity, the intermediate grown buffers are
+private to the refresher and the follow-up scatter donates them
+(``_scatter_donated``) instead of allocating a third copy.
 
 Transfer accounting: ``h2d_bytes`` / ``h2d_rows`` count the actual
 host-to-device payload (scattered rows + scales + indices). Steady-state
@@ -54,7 +66,8 @@ of bank size.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Sequence, Tuple
+import threading
+from typing import Dict, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -69,6 +82,28 @@ from repro.kernels.retrieval_topk.ops import (default_int4_impl,
                                               retrieval_topk_int4)
 from repro.kernels.retrieval_topk.ref import (retrieval_topk_int4_blocked,
                                               retrieval_topk_reference)
+
+
+class BankSnapshot(NamedTuple):
+    """One published generation of the device bank. The arrays are immutable
+    jax buffers and ``uids`` is a private host copy, so holding a snapshot
+    pins a complete, internally consistent view of the bank at one refresh
+    point — later flips never retarget it."""
+    packed: jax.Array    # (cap', E//2) int8 (or (cap', E) fp32 in debug mode)
+    scales: jax.Array    # (cap', 1) fp32
+    n: int               # valid rows; rows >= n are masked at query time
+    uids: np.ndarray     # (n,) int64, row i -> uid, aligned with this epoch
+    generation: int      # monotonically increasing flip counter
+
+
+# scatter jits shared across DeviceBank instances (single-device layout —
+# the sharded path pins out_shardings per mesh and stays per-instance).
+# Copy-on-write: the published input buffer survives for in-flight scans.
+_scatter_cow = jax.jit(lambda a, r, v: a.at[r].set(v))
+# donating variant, safe ONLY when the input buffer is private to the
+# refresher (e.g. the freshly grown shadow) — never for a published buffer
+_scatter_donated = jax.jit(lambda a, r, v: a.at[r].set(v),
+                           donate_argnums=(0,))
 
 
 class DeviceBank:
@@ -95,41 +130,73 @@ class DeviceBank:
         self.impl = impl
         self.block_n = block_n
         self._cap = 0
-        # (packed, scales, n) swapped as ONE tuple: a reader (search) grabs
-        # the whole triple in a single atomic attribute read, so a sync
-        # racing a scan can only hand it a stale-but-matched snapshot,
-        # never a torn packed/scales pair
-        self._state: Optional[Tuple[jax.Array, jax.Array, int]] = None
+        # the published BankSnapshot, swapped as ONE object: a reader
+        # (search) grabs it in a single atomic attribute read, so a flip
+        # racing a scan can only hand it a stale-but-matched generation,
+        # never a torn packed/scales/uids combination
+        self._published: Optional[BankSnapshot] = None
+        self._gen = 0
+        # serializes whole refreshes (apply + publish) across DRIVERS: the
+        # in-lock sync path and an async scheduler epoch must never mint
+        # generations concurrently (each bases its shadow on what it thinks
+        # is the latest published state — unserialized, one would drop the
+        # other's rows). Scans never take it.
+        self.refresh_lock = threading.RLock()
         # copy-on-write scatter: the update lands in a fresh device buffer
         # (device-to-device; the host payload is still only the dirty rows).
         # NOT donated — an in-flight search may still hold the old snapshot,
-        # and donation would invalidate it under its feet.
-        self._scatter = jax.jit(lambda a, r, v: a.at[r].set(v),
-                                out_shardings=self._sh_rows)
+        # and donation would invalidate it under its feet. Single-device
+        # banks share the module-level jits; the sharded layout pins
+        # out_shardings per mesh.
+        if self.n_shards == 1:
+            self._scatter = _scatter_cow
+            self._scatter_donated = _scatter_donated
+        else:
+            self._scatter = jax.jit(lambda a, r, v: a.at[r].set(v),
+                                    out_shardings=self._sh_rows)
+            self._scatter_donated = jax.jit(
+                lambda a, r, v: a.at[r].set(v),
+                out_shardings=self._sh_rows, donate_argnums=(0,))
         self._search_fns: Dict = {}
         # host->device transfer accounting (see module docstring)
         self.h2d_bytes = 0
         self.h2d_rows = 0
         self.n_syncs = 0
         self.n_grows = 0
+        self.n_warms = 0
+        # (nq, k, kw) of the most recent search: the async refresher replays
+        # this shape against a grown shadow snapshot to pre-compile the
+        # search executable off the query path (see ``warm``)
+        self._warm_hint: Optional[Tuple[int, int, tuple]] = None
 
     # -- state ---------------------------------------------------------------
 
     def __len__(self) -> int:
-        return 0 if self._state is None else self._state[2]
+        st = self._published
+        return 0 if st is None else st.n
 
     @property
     def capacity(self) -> int:
         return self._cap
 
+    @property
+    def published(self) -> Optional[BankSnapshot]:
+        """The live snapshot (atomic read; may lag the host in async mode)."""
+        return self._published
+
+    @property
+    def generation(self) -> int:
+        st = self._published
+        return 0 if st is None else st.generation
+
     def stats(self) -> Dict[str, int]:
-        st = self._state
+        st = self._published
         return {"h2d_bytes": self.h2d_bytes, "h2d_rows": self.h2d_rows,
                 "n_syncs": self.n_syncs, "n_grows": self.n_grows,
                 "capacity": self._cap, "n": len(self),
-                "n_shards": self.n_shards,
+                "n_shards": self.n_shards, "generation": self.generation,
                 "device_bytes": 0 if st is None else
-                int(st[0].nbytes + st[1].nbytes)}
+                int(st.packed.nbytes + st.scales.nbytes)}
 
     def device_bytes(self) -> int:
         return self.stats()["device_bytes"]
@@ -142,7 +209,11 @@ class DeviceBank:
     def _grow_to(self, packed, scales, cap: int):
         """Slab-doubling on device, in lockstep with the host slab: allocate
         the doubled buffers and copy the old content device-to-device —
-        never a host re-upload. Returns the grown (packed, scales)."""
+        never a host re-upload. Returns the grown (packed, scales). Pure
+        w.r.t. bank state: ``self._cap`` is committed by the caller only
+        after the whole epoch's device work succeeded, so a failed grow
+        epoch retries from scratch instead of scattering past the old
+        buffer's bounds."""
         old_cap = self._cap
         new_p = self._device_zeros((cap, self._row_width), self._row_dtype)
         new_s = self._device_zeros((cap, 1), jnp.float32)
@@ -151,30 +222,30 @@ class DeviceBank:
                                    self._sh_rows)
             new_s = jax.device_put(new_s.at[:old_cap].set(scales),
                                    self._sh_rows)
-            self.n_grows += 1
-        self._cap = cap
-        self._search_fns.clear()  # traced shapes changed (O(log N) times)
         return new_p, new_s
 
-    def sync(self, host_packed: np.ndarray, host_scales: np.ndarray,
-             n: int, dirty_rows: np.ndarray
-             ) -> Tuple[jax.Array, jax.Array, int]:
-        """Bring the device slab up to date with the host slab. Caller (the
-        store) must hold its mutation lock; ``dirty_rows`` are the row
-        indices written since the last sync. Only those rows travel. The
-        new (packed, scales, n) snapshot is published atomically at the
-        end and returned — an in-flight search keeps its old matched
-        snapshot; pass the return to ``search(state=...)`` to pin a scan
-        to this sync point."""
-        packed, scales = ((None, None) if self._state is None
-                          else self._state[:2])
+    def apply_rows(self, host_cap: int, dirty_rows: np.ndarray,
+                   vals: np.ndarray, scs: np.ndarray, n: int,
+                   uids: np.ndarray) -> BankSnapshot:
+        """Build the SHADOW snapshot: grow device capacity to match
+        ``host_cap`` if the host slab doubled, then scatter the dirty rows'
+        payload (``vals``/``scs`` are host copies of those rows, taken at
+        epoch begin so a concurrent writer can't change them under the
+        dispatch). The published state is untouched — callers flip it with
+        ``publish``. Refreshes must be serialized by the caller (the store
+        lock in sync mode, the scheduler's epoch lock in async mode); scans
+        need no serialization at all."""
+        base = self._published
+        packed, scales = ((None, None) if base is None
+                          else (base.packed, base.scales))
         # device capacity = host capacity rounded up to a multiple of the
         # shard count (padded rows are masked by n_valid at query time)
-        cap = host_packed.shape[0]
+        cap = int(host_cap)
         cap += (-cap) % self.n_shards
-        if cap > self._cap:
+        old_cap = self._cap
+        private = cap > old_cap  # grown buffers have no readers -> donatable
+        if private:
             packed, scales = self._grow_to(packed, scales, cap)
-        self.n_syncs += 1
         dirty_rows = np.asarray(dirty_rows, np.int64).ravel()
         if dirty_rows.size:
             # pad the scatter to a pow2 bucket (duplicate last row:
@@ -185,15 +256,93 @@ class DeviceBank:
             pad = bucket - m
             rows = np.concatenate([dirty_rows, np.full(pad, dirty_rows[-1])])
             rows32 = rows.astype(np.int32)
-            vals = host_packed[rows]
-            scs = host_scales[rows]
-            packed = self._scatter(packed, rows32, vals)
-            scales = self._scatter(scales, rows32, scs)
+            pad_sel = np.concatenate([np.arange(m), np.full(pad, m - 1)])
+            vals = np.ascontiguousarray(vals[pad_sel])
+            scs = np.ascontiguousarray(scs[pad_sel])
+            scatter = self._scatter_donated if private else self._scatter
+            packed = scatter(packed, rows32, vals)
+            scales = self._scatter_donated(scales, rows32, scs) if private \
+                else self._scatter(scales, rows32, scs)
             self.h2d_bytes += int(vals.nbytes + scs.nbytes +
                                   2 * rows32.nbytes)
             self.h2d_rows += m
-        self._state = (packed, scales, int(n))
-        return self._state
+        if private:
+            # commit the growth only now that every dispatch above was
+            # accepted: an exception mid-epoch leaves _cap at the published
+            # buffers' size, so the requeued retry grows again instead of
+            # scattering out-of-bounds (silently dropped by .at[].set)
+            self._cap = cap
+            if base is not None and old_cap:
+                self.n_grows += 1
+            self._search_fns.clear()  # traced shapes changed (O(log N)x)
+        self._gen += 1
+        return BankSnapshot(packed, scales, int(n),
+                            np.asarray(uids, np.int64), self._gen)
+
+    def publish(self, snap: BankSnapshot) -> BankSnapshot:
+        """Atomically flip the published pointer to ``snap`` (all-or-nothing:
+        one attribute write installs packed+scales+n+uids+generation
+        together). In-flight scans keep whatever snapshot they already
+        read. Generations must advance: an out-of-order flip means two
+        refreshes ran concurrently (each based on what it *thought* was the
+        latest state) and one of them dropped rows — refresh drivers
+        serialize whole epochs precisely to make this unreachable, so fail
+        loudly rather than serve a bank missing updates."""
+        cur = self._published
+        assert cur is None or snap.generation > cur.generation, (
+            f"out-of-order flip: generation {snap.generation} after "
+            f"{cur.generation} — refresh epochs must be serialized")
+        self._published = snap
+        self.n_syncs += 1
+        return snap
+
+    def warm(self, state: BankSnapshot) -> bool:
+        """Pre-compile the search path for ``state``'s array shapes,
+        replaying the last-seen query shape. A capacity change invalidates
+        the traced search executable, and the retrace + compile costs
+        10-20x a steady scan — the sync path pays that inline on the first
+        post-growth query (it grows under the store lock on the query
+        path, so it structurally cannot hide it); the async refresher
+        calls this on the SHADOW snapshot before the flip, so queries
+        never see the spike. The single-device int4 path compiles
+        ahead-of-time without executing (``warm_retrieval_topk_int4``);
+        the sharded/fp32 paths warm by running one dummy scan. Returns
+        False when no query shape has been observed yet."""
+        hint = self._warm_hint
+        if hint is None or state.n == 0:
+            return False
+        nq, k, kw = hint
+        k = min(k, state.n)
+        if self.store_int4 and self.n_shards == 1:
+            from repro.kernels.retrieval_topk.ops import (
+                warm_retrieval_topk_int4)
+            warm_retrieval_topk_int4(
+                (nq, self.embed_dim), tuple(state.packed.shape), k,
+                normalize=False, impl=self._resolve_impl(),
+                **dict({"block_n": self.block_n}, **dict(kw)))
+        else:
+            dummy = np.zeros((nq, self.embed_dim), np.float32)
+            self.search(dummy, k, state=state, **dict(kw))
+        self.n_warms += 1
+        return True
+
+    def sync(self, host_packed: np.ndarray, host_scales: np.ndarray,
+             n: int, dirty_rows: np.ndarray,
+             uids: Optional[np.ndarray] = None) -> BankSnapshot:
+        """Fused apply + flip (the in-lock sync path): bring the device slab
+        up to date with the host slab and publish. Caller must hold the
+        store's mutation lock; ``dirty_rows`` are the row indices written
+        since the last refresh — only those rows travel. Returns the new
+        snapshot; pass it to ``search(state=...)`` to pin a scan to this
+        sync point."""
+        dirty_rows = np.asarray(dirty_rows, np.int64).ravel()
+        if uids is None:
+            uids = np.zeros((int(n),), np.int64)
+        with self.refresh_lock:
+            snap = self.apply_rows(host_packed.shape[0], dirty_rows,
+                                   host_packed[dirty_rows],
+                                   host_scales[dirty_rows], n, uids)
+            return self.publish(snap)
 
     # -- search --------------------------------------------------------------
 
@@ -249,21 +398,24 @@ class DeviceBank:
         self._search_fns[key] = fn
         return fn
 
-    def search(self, queries: np.ndarray, k: int, state=None, **kw
+    def search(self, queries: np.ndarray, k: int,
+               state: Optional[BankSnapshot] = None, **kw
                ) -> Tuple[np.ndarray, np.ndarray]:
         """Fused top-k over the device-resident bank: (Q, E) queries ->
         (row indices (Q, k) int64, scores (Q, k) fp32), descending score.
         Zero host->device slab traffic — only the query batch travels.
-        Scans ONE published (packed, scales, n) snapshot — pass the tuple
-        ``sync`` returned to pin the scan to that sync point (the store
-        does, keeping row indices aligned with its uid snapshot); defaults
-        to the latest. Extra ``kw`` are kernel tuning knobs (block_q, ...)
+        Scans ONE published ``BankSnapshot`` — pass the snapshot a refresh
+        returned to pin the scan to that generation (the store does,
+        keeping row indices aligned with the snapshot's uids); defaults to
+        the latest. Extra ``kw`` are kernel tuning knobs (block_q, ...)
         forwarded to the single-device scan; the sharded path configures its
         kernel at bank construction (``block_n``) and rejects them."""
         if state is None:
-            state = self._state
+            state = self._published
         assert state is not None, "sync() before search()"
-        packed, scales, n = state
+        self._warm_hint = (int(np.asarray(queries).shape[0]), int(k),
+                           tuple(sorted(kw.items())))
+        packed, scales, n = state.packed, state.scales, state.n
         k = min(k, n)
         q = jnp.asarray(np.asarray(queries, np.float32))
         impl = self._resolve_impl()

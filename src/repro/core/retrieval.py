@@ -48,12 +48,15 @@ class RetrievalResult:
 
 def speculative_filter(store: EmbeddingStore,
                        query_embs: Sequence[np.ndarray], k: int, *,
-                       impl: str = "auto"
+                       impl: str = "auto", freshness: Optional[str] = None
                        ) -> List[Tuple[np.ndarray, np.ndarray]]:
     """Round 1: per-granularity top-k, all granularities in one fused batch.
-    query_embs: list of (E,) vectors."""
+    query_embs: list of (E,) vectors. ``freshness`` is the device-path
+    staleness override (see ``EmbeddingStore.search_batch``); round 1 is
+    where stale-serving pays off — the candidate set feeds a verify +
+    refine stage that re-scores against live embeddings anyway."""
     Q = np.stack([np.asarray(q, np.float32) for q in query_embs])
-    uids, scores = store.search_batch(Q, k, impl=impl)
+    uids, scores = store.search_batch(Q, k, impl=impl, freshness=freshness)
     return list(zip(uids, scores))
 
 
@@ -205,13 +208,22 @@ def speculative_retrieve(
         *, k: int = 10, final_k: int = 10,
         refine_fn: Optional[Callable] = None,
         refine_budget: Optional[int] = None,
-        upgrade: bool = True, impl: str = "auto") -> RetrievalResult:
+        upgrade: bool = True, impl: str = "auto",
+        freshness: Optional[str] = None) -> RetrievalResult:
     """Full pipeline (see module docstring for the ``refine_fn`` contract).
-    ``refine_budget`` caps refinements (query latency budget, Fig. 15)."""
+    ``refine_budget`` caps refinements (query latency budget, Fig. 15);
+    ``freshness`` is forwarded to the round-1 store scan (async device-bank
+    staleness policy)."""
     t0 = time.perf_counter()
-    rounds = speculative_filter(store, query_embs, k, impl=impl)
+    rounds = speculative_filter(store, query_embs, k, impl=impl,
+                                freshness=freshness)
     t1 = time.perf_counter()
     uids, _ = global_verify(rounds, k)
+    if uids.size:
+        # a stale bank snapshot (async refresh) can surface uids deleted
+        # since its generation; round 3 reads live store rows, so drop the
+        # dead ones here — "no longer exists" is the correct stale answer
+        uids = uids[store.contains(uids)]
     t2 = time.perf_counter()
     fine_embs, n_ref = _refine_round(store, uids, refine_fn, refine_budget,
                                      upgrade)

@@ -38,6 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -85,6 +86,11 @@ class EmbeddingStore:
         self._bank_dirty = np.zeros(self._cap, np.bool_)
         self._any_bank_dirty = False
         self._bank = None  # DeviceBank, created lazily / via attach
+        # bounded-staleness accounting for the async refresh path: how many
+        # distinct rows are dirty-but-unpublished, and since when
+        self._bank_pending_rows = 0
+        self._bank_first_dirty_t: Optional[float] = None
+        self._bank_refresher = None  # RefreshScheduler in async mode
         self._escaped_n = 0  # rows visible to views handed out to readers
         # re-upload accounting for the non-resident kernel paths (the bytes
         # the device bank exists to eliminate; see benchmarks/store_scale.py)
@@ -179,8 +185,7 @@ class EmbeddingStore:
             self._meta["fine"][rows] = fine
             self._dirty[rows] = True
             self._any_dirty = True
-            self._bank_dirty[rows] = True
-            self._any_bank_dirty = True
+            self._mark_bank_dirty_locked(rows)
             if act is not None:
                 ap, ascale, shape = act
                 for j, u in enumerate(uids.tolist()):
@@ -208,10 +213,45 @@ class EmbeddingStore:
             self._meta["fine"][rows] = True
             self._dirty[rows] = True
             self._any_dirty = True
-            self._bank_dirty[rows] = True
-            self._any_bank_dirty = True
+            self._mark_bank_dirty_locked(rows)
             for u in uids.tolist():
                 self._act_cache.pop(u, None)  # §3.4: storage freed once refined
+
+    def delete(self, uid: int) -> None:
+        self.delete_batch([uid])
+
+    def delete_batch(self, uids: Sequence[int]) -> None:
+        """Remove uids, keeping the slab dense: each deleted row is filled by
+        swapping the current last row down (rows never leave holes, so the
+        scan paths stay a contiguous [0, n) range). The moved row is marked
+        dirty in both bitmaps — the dense cache requantizes it on the next
+        refresh (copy-on-write if a snapshot escaped) and the device bank
+        re-scatters it on the next epoch; the vacated tail rows are masked
+        everywhere by the shrunken ``n``. Raises KeyError (before mutating
+        anything) if any uid is absent."""
+        uids = list(dict.fromkeys(int(u) for u in np.asarray(uids,
+                                                             np.int64).ravel()))
+        if not uids:
+            return
+        with self._lock:
+            self._rows_of_locked(np.asarray(uids, np.int64))  # validate all
+            for u in uids:
+                row = self._uid_to_row.pop(u)
+                self._act_cache.pop(u, None)
+                last = self._n - 1
+                if row != last:
+                    self._packed[row] = self._packed[last]
+                    self._scales[row] = self._scales[last]
+                    self._meta[row] = self._meta[last]
+                    self._uid_to_row[int(self._meta["uid"][row])] = row
+                    self._dirty[row] = True
+                    self._any_dirty = True
+                    self._mark_bank_dirty_locked(np.array([row], np.int64))
+                # the vacated tail slot must not leak into the next refresh
+                # epoch (it is out of range for the shrunken n)
+                self._dirty[last] = False
+                self._unmark_bank_dirty_locked(last)
+                self._n = last
 
     # -- index ---------------------------------------------------------------
 
@@ -225,6 +265,18 @@ class EmbeddingStore:
     def rows_of(self, uids) -> np.ndarray:
         with self._lock:
             return self._rows_of_locked(np.asarray(uids, np.int64).ravel())
+
+    def contains(self, uids) -> np.ndarray:
+        """(len(uids),) bool mask of uids currently in the store. Retrieval
+        uses it to drop candidates that were deleted after the scan that
+        surfaced them — inherent to stale-serving under the async bank
+        policy (a lagging snapshot can name uids that no longer exist),
+        and a narrow race even on the exact paths."""
+        uids = np.asarray(uids, np.int64).ravel()
+        with self._lock:
+            idx = self._uid_to_row
+            return np.fromiter((int(u) in idx for u in uids), np.bool_,
+                               len(uids))
 
     def row_of(self, uid: int) -> int:
         with self._lock:
@@ -341,6 +393,57 @@ class EmbeddingStore:
 
     # -- device bank ---------------------------------------------------------
 
+    def _mark_bank_dirty_locked(self, rows: np.ndarray) -> None:
+        """Record freshly dirtied bank rows and keep the bounded-staleness
+        counters exact: ``_bank_pending_rows`` counts DISTINCT dirty rows,
+        ``_bank_first_dirty_t`` timestamps the oldest unpublished write.
+        Wakes the async refresher, if any."""
+        rows = np.unique(rows)  # a batch may hit one row twice (dup uids)
+        fresh = int(np.count_nonzero(~self._bank_dirty[rows]))
+        self._bank_dirty[rows] = True
+        self._any_bank_dirty = True
+        if fresh:
+            self._bank_pending_rows += fresh
+            if self._bank_first_dirty_t is None:
+                self._bank_first_dirty_t = time.monotonic()
+        ref = self._bank_refresher
+        if ref is not None:
+            ref.notify()
+
+    def _unmark_bank_dirty_locked(self, row: int) -> None:
+        if self._bank_dirty[row]:
+            self._bank_dirty[row] = False
+            self._bank_pending_rows -= 1
+            if self._bank_pending_rows == 0:
+                # nothing pending -> the "oldest unpublished write" stamp
+                # must reset, or the next write inherits an ancient age and
+                # the max_lag_ms policy spuriously fresh-blocks
+                self._bank_first_dirty_t = None
+
+    def _take_bank_dirty_locked(self) -> np.ndarray:
+        """Consume the dirty slice for one refresh epoch: rows dirtied AFTER
+        this call belong to the next epoch (they re-set their bit), so a
+        concurrent writer is either fully in this epoch or fully in a later
+        one — never half-included. Resets the staleness counters."""
+        if self._any_bank_dirty:  # steady-state queries skip the O(N) scan
+            rows = np.nonzero(self._bank_dirty[:self._n])[0]
+            self._bank_dirty[:self._n] = False
+            self._any_bank_dirty = False
+        else:
+            rows = np.zeros((0,), np.int64)
+        self._bank_pending_rows = 0
+        self._bank_first_dirty_t = None
+        return rows
+
+    def _requeue_bank_rows(self, rows: np.ndarray) -> None:
+        """Put a consumed dirty slice back (a refresh epoch failed after its
+        begin point): the rows must land in a later epoch, not vanish."""
+        with self._lock:
+            live = np.asarray(rows, np.int64)
+            live = live[live < self._n]
+            if live.size:
+                self._mark_bank_dirty_locked(live)
+
     def attach_device_bank(self, devices=None, *, impl: str = "auto",
                            block_n: int = 4096):
         """Create (or replace) the device-resident searchable bank. ``devices``
@@ -354,8 +457,8 @@ class EmbeddingStore:
                                     store_int4=self.store_int4,
                                     devices=devices, impl=impl,
                                     block_n=block_n)
-            self._bank_dirty[:self._n] = True
-            self._any_bank_dirty = self._n > 0
+            if self._n:
+                self._mark_bank_dirty_locked(np.arange(self._n))
             return self._bank
 
     @property
@@ -363,24 +466,72 @@ class EmbeddingStore:
         """The attached DeviceBank, or None."""
         return self._bank
 
+    @property
+    def bank_refresher(self):
+        """The async RefreshScheduler, or None in sync mode."""
+        return self._bank_refresher
+
+    def set_bank_refresh(self, mode: str = "sync", *,
+                         max_lag_rows: Optional[int] = None,
+                         max_lag_ms: Optional[float] = None,
+                         thread: bool = True, **scheduler_kw):
+        """Choose the device-bank refresh policy.
+
+        ``"sync"`` (default): every ``search_batch(impl='device')`` brings
+        the bank exactly up to date under the store lock before scanning —
+        PR 2 semantics; tears down any async scheduler (draining its
+        pending rows into one last flip).
+
+        ``"async"``: refresh runs as double-buffered epochs OUTSIDE the
+        lock (``repro.core.bank_refresh``), by a background thread unless
+        ``thread=False`` (then the caller steps the returned scheduler).
+        Queries serve the published — possibly lagging — snapshot while
+        dirt stays within ``max_lag_rows`` / ``max_lag_ms`` (None =
+        unbounded, 0 = fresh-blocking) and block for a refresh otherwise.
+        Returns the scheduler (async) or None (sync)."""
+        from repro.core.bank_refresh import RefreshScheduler
+        if mode not in ("sync", "async"):
+            raise ValueError(mode)
+        old = self._bank_refresher
+        if old is not None:
+            # drain while queries still route through the scheduler: if the
+            # refresher were unhooked first, a query could enter the sync
+            # path and race the drain's epoch (two unserialized refresh
+            # drivers). The bank's refresh_lock closes the remaining
+            # unhook-vs-in-flight-epoch window.
+            old.stop(drain=True)
+            self._bank_refresher = None
+        if mode == "sync":
+            return None
+        ref = RefreshScheduler(self, max_lag_rows=max_lag_rows,
+                               max_lag_ms=max_lag_ms, thread=thread,
+                               **scheduler_kw)
+        self._bank_refresher = ref
+        return ref
+
+    def kick_bank_refresh(self) -> bool:
+        """Hint that now is a good moment to refresh (e.g. right after an
+        embedding drain, so the scatter hides behind host work instead of
+        landing on the first query). No-op in sync mode."""
+        ref = self._bank_refresher
+        if ref is None:
+            return False
+        ref.notify()
+        return True
+
     def _sync_bank_locked(self):
-        """Refresh the device bank under the mutation lock: scatter only the
-        rows dirtied since the last sync (the bank grows device-side in
-        lockstep with host slab doublings). Returns (n, uid snapshot, bank,
-        bank state) taken atomically with the sync — the consistency point
-        the scan is pinned to (a concurrent later sync, or a bank
-        re-attach, must not retarget it)."""
+        """In-lock refresh (sync mode): scatter only the rows dirtied since
+        the last refresh (the bank grows device-side in lockstep with host
+        slab doublings) and publish. Returns (bank, snapshot) — the
+        consistency point the scan is pinned to (a concurrent later
+        refresh, or a bank re-attach, must not retarget it)."""
         if self._bank is None:
             self.attach_device_bank()
         bank = self._bank
-        if self._any_bank_dirty:  # steady-state queries skip the O(N) scan
-            rows = np.nonzero(self._bank_dirty[:self._n])[0]
-            self._bank_dirty[:self._n] = False
-            self._any_bank_dirty = False
-        else:
-            rows = np.zeros((0,), np.int64)
-        state = bank.sync(self._packed, self._scales, self._n, rows)
-        return self._n, self._meta["uid"][:self._n].copy(), bank, state
+        rows = self._take_bank_dirty_locked()
+        snap = bank.sync(self._packed, self._scales, self._n, rows,
+                         self._meta["uid"][:self._n].copy())
+        return bank, snap
 
     # -- search --------------------------------------------------------------
 
@@ -411,6 +562,7 @@ class EmbeddingStore:
         return uids[idx], scores[idx]
 
     def search_batch(self, queries: np.ndarray, k: int, *, impl: str = "auto",
+                     freshness: Optional[str] = None,
                      **kw) -> Tuple[np.ndarray, np.ndarray]:
         """Fused batched top-k over the whole store: queries (Q, E) ->
         (uids (Q, k), scores (Q, k)), both sorted by descending score.
@@ -423,7 +575,14 @@ class EmbeddingStore:
         the device path works on CPU too, it just loses to BLAS).
         ``impl='device'``/``'pallas'``/``'xla'``/``'numpy'`` force a
         backend; the latter two re-upload the fp32 slab every call. Scores
-        are raw inner products (normalize=False) to match ``search``."""
+        are raw inner products (normalize=False) to match ``search``.
+
+        ``freshness`` applies to the device path under an async refresh
+        policy (``set_bank_refresh("async", ...)``): None obeys the
+        configured staleness bound, ``"fresh"`` blocks for a refresh,
+        ``"stale"`` serves the published generation as-is. In sync mode
+        (default) every device query is exact and ``freshness`` is
+        ignored."""
         queries = np.asarray(queries, np.float32).reshape(-1, self.embed_dim)
         nq = len(queries)
         if self._n == 0 or nq == 0:
@@ -434,14 +593,26 @@ class EmbeddingStore:
             # the device-resident bank eliminates the per-query H2D upload
             impl = "numpy" if jax.default_backend() == "cpu" else "device"
         if impl == "device":
-            with self._lock:
-                n, uids, bank, state = self._sync_bank_locked()
-            # the scan runs outside the lock, pinned to the sync-point bank
-            # AND snapshot (immutable arrays; a racing sync or re-attach
-            # publishes/installs the NEXT one), so row indices stay aligned
-            # with the uid copy
-            idx, top_s = bank.search(queries, min(k, n), state=state, **kw)
-            return uids[idx], top_s
+            ref = self._bank_refresher
+            if ref is not None:
+                # async: no store lock on the query path at all — the
+                # scheduler hands back a published generation (refreshing
+                # first only when the policy demands it)
+                snap = ref.snapshot_for_query(freshness)
+                bank = self._bank
+            else:
+                with self._lock:
+                    bank, snap = self._sync_bank_locked()
+            if snap.n == 0:
+                return (np.zeros((nq, 0), np.int64),
+                        np.zeros((nq, 0), np.float32))
+            # the scan runs outside the lock, pinned to the refresh-point
+            # bank AND snapshot (immutable arrays; a racing refresh or
+            # re-attach publishes/installs the NEXT one), so row indices
+            # stay aligned with the snapshot's uid copy
+            idx, top_s = bank.search(queries, min(k, snap.n), state=snap,
+                                     **kw)
+            return snap.uids[idx], top_s
         slab, n, uids = self._search_snapshot()
         k = min(k, n)
         if impl == "numpy":

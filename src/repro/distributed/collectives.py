@@ -36,7 +36,9 @@ from repro.core.quantize import dequantize_int8, quantize_int8
 def psum_scatter_tree(tree, axis_name: str):
     """Inside shard_map: reduce-scatter every leaf along its leading dim."""
     def f(g):
-        if g.ndim == 0 or g.shape[0] % jax.lax.axis_size(axis_name) != 0:
+        # static axis size: psum of a concrete constant folds to n * x
+        # (jax.lax.axis_size is not available on every supported jax version)
+        if g.ndim == 0 or g.shape[0] % jax.lax.psum(1, axis_name) != 0:
             return jax.lax.psum(g, axis_name)
         return jax.lax.psum_scatter(g, axis_name, scatter_dimension=0, tiled=True)
     return jax.tree.map(f, tree)
@@ -61,8 +63,6 @@ def compressed_psum(tree, axis_name: str, error_state=None):
 
     Quantize (g + e) -> int8/scale; psum the int32-accumulated payload and the
     scales' max; dequantize; error = (g + e) - dequant(local)."""
-    n = jax.lax.axis_size(axis_name)
-
     def f(g, e):
         g32 = g.astype(jnp.float32) + (0.0 if e is None else e)
         flat = g32.reshape(1, -1) if g32.ndim <= 1 else g32.reshape(g32.shape[0], -1)

@@ -106,6 +106,52 @@ def default_int4_impl() -> str:
     #                          materializes the fp32 bank (see ref.py)
 
 
+# ahead-of-time compiled executables, keyed by (dispatch key, arg shapes).
+# Populated by ``warm_retrieval_topk_int4`` (the async bank refresher calls
+# it for a grown bank BEFORE publishing, so the retrace+compile never lands
+# on a query); ``retrieval_topk_int4`` serves from it when shapes match.
+_AOT_INT4 = {}
+
+
+def _int4_dispatch_key(impl, interpret, k, normalize, kw):
+    if impl in (None, "auto"):
+        impl = default_int4_impl()
+    if impl == "pallas":
+        if not _HAS_PALLAS:
+            raise RuntimeError("retrieval_topk_int4 impl='pallas' requested "
+                               "but the Pallas kernel is unavailable in this "
+                               "jax build; use impl='auto' or 'xla'")
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        kw = dict(kw, interpret=interpret)
+    elif impl not in ("xla", "ref"):
+        raise ValueError(f"unknown retrieval_topk_int4 impl: {impl!r}")
+    return impl, tuple(sorted(kw.items()))
+
+
+def warm_retrieval_topk_int4(query_shape: Tuple[int, int],
+                             packed_shape: Tuple[int, int], k: int, *,
+                             normalize: bool = False, impl: str = "auto",
+                             interpret: Optional[bool] = None, **kw) -> None:
+    """AOT-compile the fused int4 scan for the given shapes WITHOUT
+    executing it (``jit.lower().compile()`` doesn't populate jax's call
+    cache, so the executable is parked in a side table the dispatch checks
+    first). Compilation costs 10-20x a steady scan; doing it off the query
+    path is the point — see ``DeviceBank.warm``."""
+    impl, kwt = _int4_dispatch_key(impl, interpret, k, normalize, kw)
+    key = (impl, k, normalize, kwt, tuple(query_shape), tuple(packed_shape))
+    if key in _AOT_INT4:
+        return
+    while len(_AOT_INT4) >= 64:  # bound like _jitted_int4's lru: FIFO-evict
+        _AOT_INT4.pop(next(iter(_AOT_INT4)))  # oldest = superseded capacity
+    fn = _jitted_int4(impl, k, normalize, kwt)
+    _AOT_INT4[key] = fn.lower(
+        jax.ShapeDtypeStruct(tuple(query_shape), jnp.float32),
+        jax.ShapeDtypeStruct(tuple(packed_shape), jnp.int8),
+        jax.ShapeDtypeStruct((packed_shape[0], 1), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.int32)).compile()
+
+
 @functools.lru_cache(maxsize=128)
 def _jitted_int4(impl: str, k: int, normalize: bool, kw: tuple):
     if impl == "pallas":
@@ -137,20 +183,13 @@ def retrieval_topk_int4(query: jax.Array, packed: jax.Array,
     fp32 bank is never materialized: rows dequantize block-wise right before
     scoring. ``impl``: 'pallas' (TPU kernel / interpret), 'xla' (blocked jnp
     scan, compiled everywhere), 'ref' (dequant-all oracle), or 'auto'."""
-    if impl in (None, "auto"):
-        impl = default_int4_impl()
-    if impl == "pallas":
-        if not _HAS_PALLAS:
-            raise RuntimeError("retrieval_topk_int4 impl='pallas' requested "
-                               "but the Pallas kernel is unavailable in this "
-                               "jax build; use impl='auto' or 'xla'")
-        if interpret is None:
-            interpret = jax.default_backend() != "tpu"
-        kw = dict(kw, interpret=interpret)
-    elif impl not in ("xla", "ref"):
-        raise ValueError(f"unknown retrieval_topk_int4 impl: {impl!r}")
+    impl, kwt = _int4_dispatch_key(impl, interpret, k, normalize, kw)
     n_arr = jnp.asarray(packed.shape[0] if n_valid is None else n_valid,
                         jnp.int32)
-    return _jitted_int4(impl, k, normalize,
-                        tuple(sorted(kw.items())))(query, packed, scales,
-                                                   n_arr)
+    aot = _AOT_INT4.get((impl, k, normalize, kwt, tuple(query.shape),
+                         tuple(packed.shape)))
+    if aot is not None:
+        return aot(jnp.asarray(query, jnp.float32), packed,
+                   jnp.asarray(scales, jnp.float32), n_arr)
+    return _jitted_int4(impl, k, normalize, kwt)(query, packed, scales,
+                                                 n_arr)

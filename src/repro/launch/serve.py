@@ -28,7 +28,8 @@ from repro.serving.query import QueryEngine
 
 def build_service(spec, *, n_train: int = 256, seed: int = 0, policy="recall",
                   params=None, lora=None, fw_kw=None, search_impl="auto",
-                  search_devices=None):
+                  search_devices=None, bank_refresh="sync",
+                  bank_max_lag_rows=None, bank_max_lag_ms=None):
     """Train the pre-exit predictor from self-supervised labels, then stand up
     the embedding + query engines."""
     cfg, recall = spec.model, spec.recall
@@ -58,7 +59,10 @@ def build_service(spec, *, n_train: int = 256, seed: int = 0, policy="recall",
     query = QueryEngine(params, cfg, recall, store=store,
                         refine_fn=engine.refine_fn(), query_modality="text",
                         lora=lora, fw_kw=fw_kw, search_impl=search_impl,
-                        search_devices=search_devices)
+                        search_devices=search_devices,
+                        bank_refresh=bank_refresh,
+                        bank_max_lag_rows=bank_max_lag_rows,
+                        bank_max_lag_ms=bank_max_lag_ms)
     return engine, query, {"predictor": stats, "labels": np.asarray(labels)}
 
 
@@ -81,6 +85,19 @@ def main():
     ap.add_argument("--search-shards", type=int, default=0,
                     help="shard the device bank across this many devices "
                          "(0 = all local devices when --search-impl=device)")
+    ap.add_argument("--bank-refresh", default="sync",
+                    choices=["sync", "async"],
+                    help="device-bank refresh policy: 'sync' refreshes "
+                         "exactly under the store lock per query; 'async' "
+                         "scatters dirty rows on a background scheduler and "
+                         "serves bounded-stale snapshots")
+    ap.add_argument("--bank-max-lag", type=int, default=None,
+                    help="async only: max dirty-but-unpublished ROWS before "
+                         "a query blocks for a refresh (default unbounded; "
+                         "0 = fresh-blocking)")
+    ap.add_argument("--bank-max-lag-ms", type=float, default=None,
+                    help="async only: max age in ms of the oldest "
+                         "unpublished write before a query blocks")
     args = ap.parse_args()
 
     spec = get_arch(args.arch)
@@ -91,7 +108,10 @@ def main():
         devices = jax.devices()[:args.search_shards]
     engine, query, info = build_service(spec, policy=args.policy,
                                         search_impl=args.search_impl,
-                                        search_devices=devices)
+                                        search_devices=devices,
+                                        bank_refresh=args.bank_refresh,
+                                        bank_max_lag_rows=args.bank_max_lag,
+                                        bank_max_lag_ms=args.bank_max_lag_ms)
     print(f"predictor: {info['predictor']}")
 
     data = SYN.multimodal_pairs(1, args.n_items, spec.model)
@@ -120,6 +140,12 @@ def main():
     print(f"R@1 (untrained model, sanity only): {hits / nq:.2f}")
     if engine.store.device_bank is not None:
         print(f"device bank: {engine.store.device_bank.stats()}")
+    ref = engine.store.bank_refresher
+    if ref is not None:
+        print(f"bank refresh: async, epochs={ref.n_epochs}, "
+              f"blocking={ref.n_blocking}, stale={ref.n_stale_served}, "
+              f"lag={ref.lag()}")
+        engine.store.set_bank_refresh("sync")  # drain + stop the thread
 
 
 if __name__ == "__main__":

@@ -169,6 +169,11 @@ class EmbeddingEngine:
                 uids[ids], embs, [exit_idx] * len(ids), [exit_layer] * len(ids),
                 modality=self.modality,
                 cached_hs=cached if cached is not None else None)
+        # under an async bank-refresh policy, kick the scheduler now: the
+        # freshly inserted rows scatter to the device while the host is
+        # still between drains, instead of on the first query's critical
+        # path (EdgeRAG-style index maintenance hidden behind serving)
+        self.store.kick_bank_refresh()
         self.stats.n_embedded += len(uids)
         self.stats.wall_s += time.perf_counter() - t0
         return self.stats

@@ -40,7 +40,10 @@ class QueryEngine:
                  refine_fn: Optional[Callable] = None,
                  query_modality: str = "text", lora=None,
                  fw_kw: Optional[dict] = None, search_impl: str = "auto",
-                 search_devices=None):
+                 search_devices=None, bank_refresh: str = "sync",
+                 bank_max_lag_rows: Optional[int] = None,
+                 bank_max_lag_ms: Optional[float] = None,
+                 freshness: Optional[str] = None):
         from repro.models import imagebind as IB
         self.params, self.cfg, self.recall = params, cfg, recall
         self.store = store
@@ -49,6 +52,9 @@ class QueryEngine:
         self.lora = lora
         self.fw_kw = fw_kw or {}
         self.search_impl = search_impl
+        # per-query default for the async staleness policy (None = obey the
+        # configured bound; "fresh"/"stale" force a side)
+        self.freshness = freshness
         # device-resident bank: attach eagerly so the warm-up upload happens
         # at engine construction, not on the first query. An explicit device
         # list always (re)attaches — a bank auto-attached earlier over
@@ -58,6 +64,15 @@ class QueryEngine:
             self.search_impl = "device"
         elif search_impl == "device" and store.device_bank is None:
             store.attach_device_bank()
+        # bank refresh policy: "async" moves the dirty-row scatter off the
+        # query path onto a background scheduler (bounded staleness);
+        # "sync" keeps the exact in-lock refresh and leaves an existing
+        # scheduler alone only if one was never configured here
+        if bank_refresh == "async":
+            store.set_bank_refresh("async", max_lag_rows=bank_max_lag_rows,
+                                   max_lag_ms=bank_max_lag_ms)
+        elif bank_refresh != "sync":
+            raise ValueError(f"bank_refresh={bank_refresh!r}")
         t = cfg.tower(query_modality)
         exits = recall.exit_layers(t.n_layers)
         k = recall.query_granularities
@@ -99,7 +114,8 @@ class QueryEngine:
         return speculative_retrieve(
             self.store, [by_g[g] for g in self.granularities], fine,
             k=k, final_k=final_k, refine_fn=self.refine_fn,
-            refine_budget=refine_budget, impl=self.search_impl)
+            refine_budget=refine_budget, impl=self.search_impl,
+            freshness=self.freshness)
 
     # -- batched queries -----------------------------------------------------
 
@@ -119,7 +135,8 @@ class QueryEngine:
         G = QG.shape[1]
         if not speculative:
             uids, scores = self.store.search_batch(fine_q, k,
-                                                   impl=self.search_impl)
+                                                   impl=self.search_impl,
+                                                   freshness=self.freshness)
             dt = (time.perf_counter() - t0) / B
             return [RetrievalResult(uids=uids[b], scores=scores[b],
                                     filtered_uids=uids[b], n_refined=0,
@@ -127,15 +144,28 @@ class QueryEngine:
                     for b in range(B)]
 
         # round 1: every (query, granularity) pair in ONE fused store scan
+        # (stale-tolerant under the async bank policy: rounds 2+3 verify and
+        # re-score the candidates against live embeddings anyway)
         flat_u, flat_s = self.store.search_batch(
-            QG.reshape(B * G, -1), k, impl=self.search_impl)
+            QG.reshape(B * G, -1), k, impl=self.search_impl,
+            freshness=self.freshness)
         kk = flat_u.shape[1]
         u3 = flat_u.reshape(B, G, kk)
         s3 = flat_s.reshape(B, G, kk)
         t1 = time.perf_counter()
 
-        # round 2: vectorized dedup per query
+        # round 2: vectorized dedup per query; drop uids deleted since the
+        # (possibly stale, under the async bank policy) scanned generation —
+        # round 3 reads live store rows. ONE contains() call (= one store
+        # lock acquisition) for the whole batch, sliced back per query.
         cands = [global_verify(list(zip(u3[b], s3[b])), k) for b in range(B)]
+        lens = [u.size for u, _ in cands]
+        if sum(lens):
+            live_all = self.store.contains(
+                np.concatenate([u for u, _ in cands]))
+            offs = np.cumsum([0] + lens)
+            cands = [(u[live_all[o:o + n]], s[live_all[o:o + n]])
+                     for (u, s), o, n in zip(cands, offs, lens)]
         t2 = time.perf_counter()
 
         # round 3: one deduplicated refinement batch across all queries

@@ -1,0 +1,254 @@
+"""Deterministic concurrency harness for the async device-bank refresh.
+
+Concurrency bugs in the refresh protocol (torn snapshots, half-applied
+flips, dirty rows lost between epochs, staleness-bound violations) depend on
+*interleaving*, which real threads explore non-deterministically and
+unrepeatably. This harness removes the scheduler from the picture: the three
+actors are driven as coroutine-style steps from a single thread, and every
+distinct interleaving of their steps is enumerated and replayed exactly.
+
+Actors (one step per schedule token):
+  * ``W`` — writer: applies the next scripted store mutation
+    (``add_batch`` / ``upgrade_batch`` / ``delete_batch``).
+  * ``R`` — refresher: advances the async refresh by ONE phase —
+    ``begin_epoch`` (dirty-slice handoff under the lock), ``apply`` (shadow
+    scatter), ``flip`` (atomic publish). Three tokens complete one epoch,
+    so a writer or scanner step can land between any two phases.
+  * ``S`` — scanner: one ``store.search_batch(impl="device")`` against the
+    published snapshot, recording which generation it served.
+
+Invariants asserted on EVERY schedule:
+  1. *No torn generations, bit-identical results*: each scan's (uids,
+     scores) must equal — ``np.array_equal``, not allclose — the output of
+     a sync-refresh oracle store replayed to the exact mutation prefix the
+     served generation was begun at. A scan that mixed rows from two
+     epochs, or saw a half-applied scatter, cannot match any single
+     prefix's oracle.
+  2. *Flip is all-or-nothing*: immediately after a flip, the published
+     device rows, scales, and uid snapshot equal the host slab copied at
+     that epoch's begin point, row for row.
+  3. *Bounded staleness*: after a policy-driven scan (``freshness=None``),
+     the dirty-but-unpublished row count never exceeds ``max_lag_rows``.
+  4. *Convergence*: after the schedule drains, a final refresh + scan is
+     bit-identical to the oracle at the full mutation script.
+
+The oracle shares every code path except the async scheduler (same store
+construction, same sync-mode device scan), so "bit-identical" is exact:
+same int4 payload, same kernel, same tie-breaks.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.store import EmbeddingStore
+
+
+def enumerate_interleavings(counts: Dict[str, int],
+                            limit: Optional[int] = None,
+                            stride: int = 1) -> List[str]:
+    """All distinct interleavings of ``counts[actor]`` steps per actor, in
+    lexicographic order (deterministic). ``stride``/``limit`` subsample the
+    full set evenly when it is too large to run exhaustively."""
+    keys = sorted(counts)
+    out: List[str] = []
+    prefix: List[str] = []
+    remaining = dict(counts)
+
+    def rec():
+        if not any(remaining.values()):
+            out.append("".join(prefix))
+            return
+        for k in keys:
+            if remaining[k]:
+                remaining[k] -= 1
+                prefix.append(k)
+                rec()
+                prefix.pop()
+                remaining[k] += 1
+
+    rec()
+    if stride > 1:
+        out = out[::stride]
+    if limit is not None:
+        out = out[:limit]
+    return out
+
+
+# -- scripted mutations (data, not closures: the oracle replays them) --------
+
+
+def make_script(rng: np.ndarray, E: int, base_uid: int = 1000) -> List[tuple]:
+    """A default writer script exercising all three mutation kinds, with
+    payloads drawn once so scenario and oracle apply identical bytes."""
+    return [
+        ("add", np.arange(base_uid, base_uid + 6),
+         rng.standard_normal((6, E)).astype(np.float32)),
+        ("upgrade", np.array([3, 17, 29]),
+         rng.standard_normal((3, E)).astype(np.float32)),
+        ("delete", np.array([5, 11]), None),
+    ]
+
+
+def apply_mutation(store: EmbeddingStore, m: tuple) -> None:
+    kind, uids, payload = m
+    if kind == "add":
+        store.add_batch(uids, payload, np.zeros(len(uids)), np.ones(len(uids)))
+    elif kind == "upgrade":
+        store.upgrade_batch(uids, payload)
+    elif kind == "delete":
+        store.delete_batch(uids)
+    else:
+        raise ValueError(kind)
+
+
+class ConcurrencyScenario:
+    """One (initial store, writer script, query set) configuration, runnable
+    under many schedules. Oracle results are cached per mutation prefix —
+    identical across schedules by construction."""
+
+    def __init__(self, *, n_initial: int = 40, embed_dim: int = 32,
+                 n_queries: int = 3, k: int = 5, seed: int = 0,
+                 script: Optional[List[tuple]] = None,
+                 max_lag_rows: Optional[int] = None,
+                 freshness: Optional[str] = "stale"):
+        rng = np.random.default_rng(seed)
+        self.E = embed_dim
+        self.k = k
+        self.init_embs = rng.standard_normal((n_initial, embed_dim)
+                                             ).astype(np.float32)
+        self.queries = rng.standard_normal((n_queries, embed_dim)
+                                           ).astype(np.float32)
+        self.script = script if script is not None else make_script(rng,
+                                                                    embed_dim)
+        self.max_lag_rows = max_lag_rows
+        self.freshness = freshness
+        self._oracle: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+
+    # -- store / oracle -----------------------------------------------------
+
+    def build_store(self, prefix_len: int) -> EmbeddingStore:
+        st = EmbeddingStore(self.E, capacity=8)
+        n = len(self.init_embs)
+        st.add_batch(np.arange(n), self.init_embs, np.zeros(n), np.ones(n))
+        for m in self.script[:prefix_len]:
+            apply_mutation(st, m)
+        return st
+
+    def oracle(self, prefix_len: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Sync-refresh reference: store replayed to ``prefix_len``
+        mutations, scanned by the exact same device path."""
+        if prefix_len not in self._oracle:
+            st = self.build_store(prefix_len)
+            self._oracle[prefix_len] = st.search_batch(
+                self.queries, self.k, impl="device")
+        return self._oracle[prefix_len]
+
+    # -- schedule execution -------------------------------------------------
+
+    def run_schedule(self, tokens: Sequence[str]) -> dict:
+        """Execute one interleaving, asserting the module-docstring
+        invariants. Returns counters for test-level assertions."""
+        st = self.build_store(0)
+        ref = st.set_bank_refresh("async", max_lag_rows=self.max_lag_rows,
+                                  thread=False)
+        # establish generation 1 == prefix 0 so the first scans have a
+        # mapped snapshot (the scheduler is the only generation source)
+        assert ref.refresh_once()
+        bank = st.device_bank
+        gen_to_prefix = {bank.generation: 0}
+
+        writes = 0
+        epoch = None
+        phase = 0
+        epoch_prefix = 0
+        begin_copy = None
+        stats = {"scans": 0, "flips": 0, "stale_scans": 0, "schedule":
+                 "".join(tokens)}
+
+        for t in tokens:
+            if t == "W":
+                apply_mutation(st, self.script[writes])
+                writes += 1
+            elif t == "R":
+                if phase == 0:
+                    epoch_prefix = writes
+                    begin_copy = (st._packed[:st._n].copy(),
+                                  st._scales[:st._n].copy(),
+                                  st._meta["uid"][:st._n].copy())
+                    epoch = ref.begin_epoch()
+                    phase = 1
+                elif phase == 1:
+                    if epoch is not None:
+                        ref.apply(epoch)
+                    phase = 2
+                else:
+                    if epoch is not None:
+                        snap = ref.flip(epoch)
+                        gen_to_prefix[snap.generation] = epoch_prefix
+                        self._check_flip(snap, begin_copy)
+                        stats["flips"] += 1
+                    epoch = None
+                    phase = 0
+            elif t == "S":
+                # a scan whose policy demands a refresh waits on the
+                # scheduler's epoch lock in production, i.e. the in-flight
+                # epoch COMPLETES before the scan's own refresh begins
+                # (epochs are strictly serialized — a refresh basing its
+                # shadow on anything but the latest epoch would drop that
+                # epoch's rows; DeviceBank.publish asserts this). Model the
+                # wait deterministically: finish the epoch, then scan.
+                would_block = (self.freshness == "fresh") or (
+                    self.freshness is None and not ref.within_bound())
+                if would_block and epoch is not None:
+                    if phase == 1:
+                        ref.apply(epoch)
+                    snap = ref.flip(epoch)
+                    gen_to_prefix[snap.generation] = epoch_prefix
+                    self._check_flip(snap, begin_copy)
+                    stats["flips"] += 1
+                    epoch = None
+                    phase = 0
+                g0 = bank.generation
+                u, s = st.search_batch(self.queries, self.k, impl="device",
+                                       freshness=self.freshness)
+                g1 = bank.generation
+                if g1 != g0:  # the policy blocked: inline refresh to "now"
+                    gen_to_prefix[g1] = writes
+                served = g1
+                if gen_to_prefix[served] < writes:
+                    stats["stale_scans"] += 1
+                ou, os = self.oracle(gen_to_prefix[served])
+                assert np.array_equal(u, ou) and np.array_equal(s, os), (
+                    f"scan at generation {served} (prefix "
+                    f"{gen_to_prefix[served]}) not bit-identical to the "
+                    f"sync oracle under schedule {''.join(tokens)!r}")
+                if self.freshness is None and self.max_lag_rows is not None:
+                    lag_rows, _ = ref.lag()
+                    assert lag_rows <= self.max_lag_rows, (
+                        f"staleness {lag_rows} rows > bound "
+                        f"{self.max_lag_rows} after a policy scan")
+                stats["scans"] += 1
+            else:
+                raise ValueError(t)
+
+        # drain: the remaining dirt must converge on the full-script state
+        ref.refresh_once()
+        u, s = st.search_batch(self.queries, self.k, impl="device",
+                               freshness="stale")
+        ou, os = self.oracle(writes)
+        assert np.array_equal(u, ou) and np.array_equal(s, os), (
+            f"post-drain scan diverged from the oracle under schedule "
+            f"{''.join(tokens)!r}")
+        return stats
+
+    def _check_flip(self, snap, begin_copy) -> None:
+        """All-or-nothing: the published generation equals the host slab as
+        copied at the epoch's begin point, exactly."""
+        host_packed, host_scales, host_uids = begin_copy
+        n = snap.n
+        assert n == len(host_uids)
+        assert np.array_equal(np.asarray(snap.packed)[:n], host_packed[:n])
+        assert np.array_equal(np.asarray(snap.scales)[:n], host_scales[:n])
+        assert np.array_equal(snap.uids, host_uids)

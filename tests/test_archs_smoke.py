@@ -9,6 +9,10 @@ import pytest
 from repro.configs.base import get_arch, list_archs, smoke_variant
 from repro.launch.steps import build_step
 
+# whole-arch step smokes are integration-scale (~5s each x 8 archs):
+# tier2, run via `make tier2` / `pytest -m tier2`
+pytestmark = pytest.mark.tier2
+
 ARCHS = list_archs()
 
 

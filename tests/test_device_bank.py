@@ -232,6 +232,7 @@ def test_reupload_paths_count_transfer_bytes():
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.tier2  # 8-device subprocess: slow; `make tier2` runs it
 def test_sharded_search_matches_single_device():
     run_py("""
         import numpy as np, jax
@@ -347,4 +348,78 @@ def test_refine_round_no_fn_returns_fallbacks():
     st, _ = _mk_store()
     fine, n_ref = RT.refine_round(st, [np.array([1, 2], np.int64)], None, 5)
     assert n_ref == [0] and fine[0].shape == (2, 16)
+    assert st.n_fine == 0
+
+
+@pytest.mark.parametrize("mode", ["successes", "attempts"])
+def test_refine_round_empty_uid_batch(mode):
+    """An empty candidate list never invokes refine_fn and returns an empty
+    (0, E) fallback matrix — for a lone empty query and mixed with a
+    populated one."""
+    st, embs = _mk_store()
+    calls = []
+
+    def refine(uids):
+        calls.append(np.asarray(uids).tolist())
+        return {int(u): embs[int(u)] for u in np.asarray(uids).ravel()}
+
+    empty = np.zeros((0,), np.int64)
+    fine, n_ref = RT.refine_round(st, [empty], refine, 4, budget_mode=mode)
+    assert n_ref == [0] and fine[0].shape == (0, 16)
+    assert calls == []                      # all-empty short-circuits
+    fine, n_ref = RT.refine_round(st, [empty, np.array([2, 3], np.int64)],
+                                  refine, 4, budget_mode=mode)
+    assert n_ref == [0, 2] and fine[0].shape == (0, 16)
+    assert sum(calls, []) == [2, 3]
+
+
+@pytest.mark.parametrize("mode", ["successes", "attempts"])
+def test_refine_round_all_misses_terminates(mode):
+    """A refine_fn that never succeeds must terminate (the 'successes' retry
+    loop exhausts the pending list rather than spinning), refine nothing,
+    and keep the coarse fallbacks."""
+    st, _ = _mk_store()
+    attempted = []
+
+    def never(uids):
+        attempted.extend(np.asarray(uids).ravel().tolist())
+        return {}
+
+    cand = np.arange(6, dtype=np.int64)
+    fine, n_ref = RT.refine_round(st, [cand], never, 2, budget_mode=mode)
+    assert n_ref == [0]
+    assert st.n_fine == 0
+    assert fine[0].shape == (6, 16)         # fallbacks intact
+    if mode == "attempts":
+        assert attempted == [0, 1]          # capped, single round
+    else:
+        assert attempted == list(range(6))  # retried to exhaustion, once each
+
+
+@pytest.mark.parametrize("mode", ["successes", "attempts"])
+def test_refine_round_budget_zero_attempts_nothing(mode):
+    st, embs = _mk_store()
+    calls = []
+
+    def refine(uids):
+        calls.append(np.asarray(uids).tolist())
+        return {int(u): embs[int(u)] for u in np.asarray(uids).ravel()}
+
+    fine, n_ref = RT.refine_round(st, [np.arange(5, dtype=np.int64)], refine,
+                                  0, budget_mode=mode)
+    assert calls == [] and n_ref == [0]
+    assert fine[0].shape == (5, 16) and st.n_fine == 0
+
+
+def test_refine_round_budget_zero_via_speculative_retrieve():
+    """End-to-end: refine_budget=0 serves pure coarse results (no refine
+    call, no upgrades) through the full pipeline."""
+    st, embs = _mk_store()
+
+    def boom(uids):  # must never be called
+        raise AssertionError("refine_fn called despite budget=0")
+
+    res = RT.speculative_retrieve(st, [embs[4]], fine_query=embs[4], k=6,
+                                  refine_fn=boom, refine_budget=0)
+    assert res.uids[0] == 4 and res.n_refined == 0
     assert st.n_fine == 0

@@ -72,6 +72,7 @@ def test_int4_pallas_vs_ref(N, D, block):
     np.testing.assert_allclose(x_ref, x_pl, atol=1e-6)
 
 
+@pytest.mark.tier2
 @settings(deadline=None, max_examples=25)
 @given(st.integers(1, 40), st.integers(1, 32), st.floats(0.01, 100.0))
 def test_int4_roundtrip_error_bound(n, d2, scale):
@@ -85,6 +86,7 @@ def test_int4_roundtrip_error_bound(n, d2, scale):
     assert bool(jnp.all(err <= s * 0.5 + 1e-6))
 
 
+@pytest.mark.tier2
 @settings(deadline=None, max_examples=25)
 @given(st.integers(1, 40), st.integers(1, 64))
 def test_int8_roundtrip_error_bound(n, d):
@@ -164,6 +166,7 @@ def test_moe_gemm_skewed_assignment():
     np.testing.assert_allclose(out, ref, atol=1e-4)
 
 
+@pytest.mark.tier2
 @settings(deadline=None, max_examples=20)
 @given(st.integers(2, 6), st.integers(10, 200), st.integers(8, 64))
 def test_sort_by_expert_plan_is_permutation(E, T, bt):

@@ -26,6 +26,7 @@ def _graph(N=32, E=96, F=8, C=5, seed=0):
 class TestGNN:
     CFG = GNNConfig(n_layers=3, d_hidden=16, d_feat=8, n_classes=5)
 
+    @pytest.mark.tier2
     def test_loss_grads(self):
         p = G.gnn_init(KEY, self.CFG, RC, embed_out=16)
         g = _graph()
@@ -106,6 +107,7 @@ def _recsys_batch(cfg, B=4, seed=0):
     return base
 
 
+@pytest.mark.tier2
 @pytest.mark.parametrize("kind,cfg", RECSYS_CASES)
 def test_recsys_loss_grads_retrieval(kind, cfg):
     p = R.recsys_init(KEY, cfg)
@@ -150,6 +152,7 @@ class TestMEM:
                 "text": jax.random.randint(ks[1], (B, 12), 0, 256),
                 "imu": jax.random.normal(ks[2], (B, 10, 6))}
 
+    @pytest.mark.tier2
     def test_contrastive_loss_grads(self):
         p = IB.mem_init(KEY, self.CFG, RC)
         loss, m = IB.mem_contrastive_loss(p, self.CFG, RC, self._batch(), **self.FW)
@@ -158,6 +161,7 @@ class TestMEM:
             p_, self.CFG, RC, self._batch(), **self.FW)[0])(p)
         assert all(np.isfinite(np.asarray(x)).all() for x in jax.tree.leaves(g))
 
+    @pytest.mark.tier2
     def test_refine_matches_full(self):
         p = IB.mem_init(KEY, self.CFG, RC)
         b = self._batch()

@@ -164,6 +164,7 @@ def test_branchynet_policy_runs(service):
     assert stats.n_embedded == 4
 
 
+@pytest.mark.tier2
 def test_healing_improves_coarse_alignment():
     """P-LoRA healing must increase cos(coarse, fine) on the healed tower."""
     key = jax.random.PRNGKey(1)

@@ -1,0 +1,156 @@
+"""Property-based slab-store invariants (hypothesis; falls back to the
+deterministic stub installed by tests/conftest.py when the real package is
+absent).
+
+Random interleavings of ``add_batch`` / ``upgrade_batch`` / ``delete_batch``
+are replayed against a plain-dict model; after every op the store must
+preserve:
+  * the uid→row hash index (every live uid resolves to a row holding it,
+    rows are exactly [0, n), deleted uids raise),
+  * both dirty bitmaps' bookkeeping (the bank staleness counter equals the
+    popcount of the bank bitmap; no bits beyond n),
+  * row payloads: stored int4 rows are bit-exact with
+    ``quantize_int4_np(model embedding)`` (and ``quantize_int4_np`` itself
+    stays bit-exact with the jnp ``quantize_int4``),
+  * search parity between the numpy path and the device bank.
+"""
+import numpy as np
+import pytest
+
+from hypothesis import given, settings
+from hypothesis import strategies as hs
+
+import jax.numpy as jnp
+
+from repro.core.quantize import (dequantize_int4_np, quantize_int4,
+                                 quantize_int4_np)
+from repro.core.store import EmbeddingStore
+
+E = 16
+
+
+def _check_invariants(st: EmbeddingStore, model: dict):
+    # uid -> row index bijection over exactly [0, n)
+    assert len(st) == len(model)
+    uids = st.uids()
+    assert len(uids) == len(model)
+    rows = {}
+    for u in model:
+        r = st.row_of(u)
+        assert 0 <= r < len(st)
+        assert int(uids[r]) == u
+        rows[u] = r
+    assert len(set(rows.values())) == len(rows)          # no row shared
+    # dirty-bitmap bookkeeping: exact popcount, no dirt beyond n
+    assert st._bank_pending_rows == int(st._bank_dirty[:st._n].sum())
+    assert not st._bank_dirty[st._n:].any()
+    assert not st._dirty[st._n:].any()
+    # payload: bit-exact against requantizing the model embedding
+    if model:
+        us = np.fromiter(model.keys(), np.int64, len(model))
+        want = np.stack([model[int(u)] for u in us])
+        p_want, s_want = quantize_int4_np(want)
+        rr = st.rows_of(us)
+        np.testing.assert_array_equal(st._packed[rr], p_want)
+        np.testing.assert_array_equal(st._scales[rr], s_want)
+        # and the dense accessor returns the dequantized payload
+        np.testing.assert_array_equal(st.get_embeddings(us),
+                                      dequantize_int4_np(p_want, s_want))
+
+
+def _run_ops(seed: int, n_ops: int) -> None:
+    rng = np.random.default_rng(seed)
+    st = EmbeddingStore(E, capacity=2)       # tiny: growth every few ops
+    model = {}
+    next_uid = 0
+    for _ in range(n_ops):
+        kind = rng.integers(0, 4)
+        if kind <= 1 or not model:           # add (new + some re-adds)
+            b = int(rng.integers(1, 5))
+            fresh = [next_uid + i for i in range(b)]
+            next_uid += b
+            if kind == 1 and model:          # overwrite an existing uid too
+                fresh[0] = int(rng.choice(list(model)))
+            embs = rng.standard_normal((b, E)).astype(np.float32)
+            st.add_batch(fresh, embs, np.zeros(b), np.ones(b))
+            model.update({int(u): e for u, e in zip(fresh, embs)})
+        elif kind == 2:                      # upgrade existing rows
+            b = min(int(rng.integers(1, 4)), len(model))
+            us = rng.choice(list(model), b, replace=False).astype(np.int64)
+            embs = rng.standard_normal((b, E)).astype(np.float32)
+            st.upgrade_batch(us, embs)
+            model.update({int(u): e for u, e in zip(us, embs)})
+            assert st.is_fine(us).all()
+        else:                                # delete (swap-with-last)
+            b = min(int(rng.integers(1, 4)), len(model))
+            us = rng.choice(list(model), b, replace=False).astype(np.int64)
+            st.delete_batch(us)
+            for u in us:
+                del model[int(u)]
+                with pytest.raises(KeyError):
+                    st.row_of(int(u))
+        _check_invariants(st, model)
+    # closing parity: numpy path vs device bank over the survivors
+    if model:
+        q = rng.standard_normal((3, E)).astype(np.float32)
+        k = min(5, len(model))
+        nu, _ = st.search_batch(q, k, impl="numpy")
+        du, _ = st.search_batch(q, k, impl="device")
+        for a, b2 in zip(nu, du):
+            assert set(a.tolist()) == set(b2.tolist())
+
+
+@settings(max_examples=12, deadline=None)
+@given(hs.integers(min_value=0, max_value=2**31 - 1))
+def test_mutation_interleavings_preserve_invariants(seed):
+    _run_ops(seed, n_ops=14)
+
+
+@settings(max_examples=10, deadline=None)
+@given(hs.lists(hs.floats(min_value=-100.0, max_value=100.0), min_size=1,
+                max_size=32),
+       hs.integers(min_value=0, max_value=2**31 - 1))
+def test_quantize_int4_np_bit_exact_property(vals, seed):
+    """quantize_int4_np == quantize_int4 bit-for-bit on adversarial rows:
+    drawn magnitudes spanning 4 orders, plus scaled/zeroed variants."""
+    rng = np.random.default_rng(seed)
+    row = np.zeros(E, np.float32)
+    v = np.asarray(vals, np.float32)[:E]
+    row[:len(v)] = v
+    batch = np.stack([row, row * 1e-5, row * 0.0,
+                      rng.standard_normal(E).astype(np.float32) * 50])
+    pn, sn = quantize_int4_np(batch)
+    pj, sj = quantize_int4(jnp.asarray(batch))
+    np.testing.assert_array_equal(pn, np.asarray(pj))
+    np.testing.assert_array_equal(sn, np.asarray(sj))
+
+
+def test_delete_batch_edge_cases():
+    st = EmbeddingStore(E, capacity=2)
+    rng = np.random.default_rng(0)
+    embs = rng.standard_normal((6, E)).astype(np.float32)
+    st.add_batch(np.arange(6), embs, np.zeros(6), np.ones(6),
+                 cached_hs=rng.standard_normal((6, 2, E)).astype(np.float32))
+    # missing uid raises BEFORE mutating anything
+    with pytest.raises(KeyError):
+        st.delete_batch([2, 404])
+    assert len(st) == 6 and st.row_of(2) == 2
+    # deleting the last row is a pure truncation
+    st.delete_batch([5])
+    assert len(st) == 5
+    # duplicate uids in one call are deduped
+    st.delete_batch([2, 2])
+    assert len(st) == 4
+    assert st.cached_activation(2) is None   # act cache freed
+    # the swapped-down row (old last) is still searchable by its embedding
+    moved_uid = 4
+    u, _ = st.search(embs[moved_uid], k=1)
+    assert u[0] == moved_uid
+    # empty call is a no-op; delete everything; re-add a deleted uid
+    st.delete_batch([])
+    st.delete_batch(st.uids())
+    assert len(st) == 0
+    u, s = st.search_batch(embs[:1], 3)
+    assert u.shape == (1, 0)
+    st.add(2, embs[2], exit_idx=0, exit_layer=1)
+    assert len(st) == 1 and st.row_of(2) == 0

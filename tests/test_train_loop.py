@@ -1,5 +1,8 @@
 """Train-loop integration: loss goes down, checkpoint/restart resumes
-bit-compatibly, preemption save works."""
+bit-compatibly, preemption save works.
+
+The whole module is tier2 (multi-minute CPU training smokes): deselected
+from the default fast suite, run via `make tier2` / `pytest -m tier2`."""
 import os
 import tempfile
 
@@ -9,6 +12,8 @@ import pytest
 
 from repro.configs.base import get_arch, smoke_variant
 from repro.launch.train import make_train_data, train_loop
+
+pytestmark = pytest.mark.tier2
 
 
 @pytest.fixture(scope="module")
@@ -53,4 +58,8 @@ def test_mem_smoke_trains():
         spec, shapes=(ShapeConfig("smoke_train", "train", global_batch=8),))
     out = train_loop(spec, "smoke_train", steps=15, n_data=64, log_every=0)
     assert np.isfinite(out["losses"]).all()
-    assert out["losses"][-1] < out["losses"][0] + 0.1
+    # per-batch InfoNCE at batch=8 has ~0.4 intrinsic spread across batches
+    # (measured with frozen params), so compare rolling means like the other
+    # smoke tests, not two single-batch samples
+    assert (np.mean(out["losses"][-5:])
+            <= np.mean(out["losses"][:5]) + 0.05)

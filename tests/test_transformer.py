@@ -110,6 +110,7 @@ def test_decode_ragged_lengths(setup):
     np.testing.assert_allclose(logits[0], want[0], atol=1e-4)
 
 
+@pytest.mark.tier2
 def test_moe_stack_trains():
     cfg = LMConfig(n_layers=2, d_model=32, n_heads=2, n_kv_heads=2, d_ff=0,
                    vocab=64, d_head=16,
