@@ -5,10 +5,11 @@
 #   make tier2   — the slow tests only (subprocess sharding, train-loop smoke)
 #   make test    — everything (tier-1 + tier2)
 #   make bench   — full benchmark suite (slow; trains the bench fixture)
+#   make bench-index — IVF recall/throughput sweep (BENCH_index_scale.json)
 
 PY := PYTHONPATH=src python
 
-.PHONY: check tier1 tier2 test bench-quick guard bench
+.PHONY: check tier1 tier2 test bench-quick guard bench bench-index
 
 check: tier1 bench-quick guard
 
@@ -22,10 +23,13 @@ test:
 	$(PY) -m pytest -x -q -m ""
 
 bench-quick:
-	$(PY) -m benchmarks.store_scale --sizes 1000,10000
+	$(PY) -m benchmarks.store_scale --sizes 1000,10000 --mixed-repeats 2
 
 guard:
 	$(PY) -m benchmarks.check_regression
 
 bench:
 	$(PY) -m benchmarks.run
+
+bench-index:
+	$(PY) -m benchmarks.index_scale

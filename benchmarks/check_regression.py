@@ -38,7 +38,19 @@ THROUGHPUT_KEYS = (
     "qps_reupload_xla",
     "qps_device",
     "qps_sharded",   # None unless run with >1 visible device
+    # IVF pruned-search phase (store_scale additionally hard-asserts
+    # >= 3x vs exhaustive device and recall@10 >= 0.95 at 100k rows)
+    "qps_ivf",
+    "ivf_speedup_vs_device",
+    "ivf_recall_at10",
 )
+
+# quality metrics tolerate far less drift than machine-speed metrics: a
+# loose CLI --threshold (CI uses 0.5 on non-reference runners) must not
+# loosen them — the effective threshold is min(cli, override)
+KEY_THRESHOLDS = {
+    "ivf_recall_at10": 0.05,
+}
 
 # higher-is-better metrics from the top-level mixed mutate+scan phase
 # (store_scale additionally hard-asserts mixed_async_speedup >= 1.5)
@@ -63,12 +75,16 @@ def compare(fresh: dict, base: dict, threshold: float = THRESHOLD):
             ratio = row[key] / ref[key]
             entry = (row["n"], key, ref[key], row[key], ratio)
             checked.append(entry)
-            if ratio < 1.0 - threshold:
+            if ratio < 1.0 - min(threshold, KEY_THRESHOLDS.get(key,
+                                                               threshold)):
                 regressions.append(entry)
     fm, bm = fresh.get("mixed") or {}, base.get("mixed") or {}
     # mixed-phase rows are comparable only when both runs used the same
-    # trace scale (quick runs shrink it with --sizes)
-    if fm.get("mixed_start_n") == bm.get("mixed_start_n"):
+    # trace scale (quick runs shrink it with --sizes) AND the same
+    # best-of-N selection: a best-of-4 baseline keeps the luckiest pair,
+    # which a healthy single-pass run cannot be expected to reproduce
+    if (fm.get("mixed_start_n") == bm.get("mixed_start_n") and
+            fm.get("mixed_repeats") == bm.get("mixed_repeats")):
         for key in MIXED_KEYS:
             if not fm.get(key) or not bm.get(key):
                 continue
@@ -102,8 +118,9 @@ def main(threshold: float = THRESHOLD, update_baseline: bool = False):
     with open(BASE) as f:
         base = json.load(f)
     regressions, checked = compare(fresh, base, threshold)
+    bad = {(n, key) for n, key, *_ in regressions}
     for n, key, b, a, ratio in checked:
-        flag = "  REGRESSION" if ratio < 1.0 - threshold else ""
+        flag = "  REGRESSION" if (n, key) in bad else ""
         print(f"[check_regression] n={n:>9,} {key:<28} "
               f"{b:>12,.0f} -> {a:>12,.0f}  ({ratio:5.2f}x){flag}")
     if regressions:

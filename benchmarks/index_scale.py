@@ -1,0 +1,136 @@
+"""IVF index characterization: recall/throughput curves vs nprobe and size.
+
+Deeper companion to the IVF phase in ``store_scale.py`` (which asserts the
+acceptance point: >= 3x exhaustive with recall@10 >= 0.95 at 100k rows on
+clustered data). This sweep maps the whole trade-off surface on BOTH data
+shapes so operating points can be chosen from data instead of folklore:
+
+  * ``clustered`` — mixture of blobs on the unit sphere, queries near blob
+    centers: the realistic embedding-store workload, where a tiny probe
+    fraction already recovers the exact top-k.
+  * ``uniform``   — uniform directions: the adversarial case for ANY space
+    partition (neighbors spread across many Voronoi cells), showing how
+    nprobe must grow when the corpus has no cluster structure.
+
+Per (distribution, size, nprobe): pruned q/s, exhaustive-device q/s,
+speedup, recall@10 vs the exact oracle, probed-row fraction. Sanity
+asserts: recall rises with nprobe and hits ~1 at full probe.
+
+Emits ``BENCH_index_scale.json`` (benchmarks/artifacts/).
+
+Run:  PYTHONPATH=src python -m benchmarks.index_scale [--sizes 20000,50000]
+      (also: make bench-index)
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks import common as C
+from repro.core.store import EmbeddingStore
+from repro.data.synthetic import clustered_sphere
+from repro.index.pruned_scan import recall_at_k
+
+EMBED_DIM = 256
+N_QUERY = 8
+REPS = 5
+
+
+def _median_ms(fn, reps: int = REPS) -> float:
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e3)
+
+
+def _corpus(dist: str, n: int, rng) -> tuple:
+    if dist == "clustered":
+        embs, centers = clustered_sphere(rng, n,
+                                         max(8, int(round(np.sqrt(n))) // 2),
+                                         EMBED_DIM)
+        q, _ = clustered_sphere(rng, N_QUERY, centers=centers)
+        return embs, q
+    embs = rng.standard_normal((n, EMBED_DIM)).astype(np.float32)
+    q = rng.standard_normal((N_QUERY, EMBED_DIM)).astype(np.float32)
+    embs /= np.linalg.norm(embs, axis=1, keepdims=True)
+    q /= np.linalg.norm(q, axis=1, keepdims=True)
+    return embs.astype(np.float32), q.astype(np.float32)
+
+
+def bench_one(dist: str, n: int, rng) -> dict:
+    embs, queries = _corpus(dist, n, rng)
+    n_clusters = max(16, int(round(np.sqrt(n))))
+    store = EmbeddingStore(EMBED_DIM, capacity=64)
+    store.attach_ivf(n_clusters=n_clusters, nprobe=4, min_rows=1)
+    t0 = time.perf_counter()
+    for i in range(0, n, 8192):
+        chunk = embs[i:i + 8192]
+        store.add_batch(np.arange(i, i + len(chunk)), chunk,
+                        np.zeros(len(chunk)), np.ones(len(chunk)))
+    store.ivf_maybe_recluster()
+    build_s = time.perf_counter() - t0
+
+    store.search_batch(queries, 10, impl="device")  # warm
+    device_ms = _median_ms(
+        lambda: store.search_batch(queries, 10, impl="device"))
+    nu, _ = store.search_batch(queries, 10, impl="numpy")
+
+    sweep = []
+    prev_recall = -1.0
+    probes = sorted({max(2, n_clusters // 64), n_clusters // 16,
+                     n_clusters // 4, n_clusters})
+    for nprobe in probes:
+        iu = [None]
+        store.search_batch(queries, 10, impl="ivf", nprobe=nprobe)  # warm
+        ms = _median_ms(lambda: iu.__setitem__(
+            0, store.search_batch(queries, 10, impl="ivf",
+                                  nprobe=nprobe)[0]))
+        recall = recall_at_k(iu[0], nu)
+        with store._lock:
+            frac = store.ivf_index.candidate_union(
+                queries, nprobe=nprobe).size / n
+        sweep.append({"nprobe": nprobe, "ivf_ms": ms,
+                      "qps": N_QUERY / (ms / 1e3),
+                      "speedup_vs_device": device_ms / ms,
+                      "recall_at10": recall, "union_frac": frac})
+        assert recall >= prev_recall - 0.05, (dist, n, sweep)
+        prev_recall = recall
+        print(f"[index_scale] {dist:>9} n={n:>7,} nprobe={nprobe:>4}: "
+              f"{sweep[-1]['qps']:>7,.0f} q/s "
+              f"({sweep[-1]['speedup_vs_device']:.1f}x), "
+              f"recall@10 {recall:.3f}, union {frac:.1%}")
+    assert sweep[-1]["recall_at10"] >= 0.999, sweep  # full probe == exact
+    return {"dist": dist, "n": n, "n_clusters": n_clusters,
+            "build_s": build_s, "device_ms": device_ms,
+            "reclusters": store.ivf_index.n_reclusters,
+            "train_batches": store.ivf_index.n_train_batches,
+            "sweep": sweep}
+
+
+def main(sizes=(20_000, 50_000)):
+    rng = np.random.default_rng(0)
+    results = [bench_one(dist, n, rng)
+               for dist in ("clustered", "uniform") for n in sizes]
+    rows = []
+    for r in results:
+        best = max((s for s in r["sweep"] if s["recall_at10"] >= 0.95),
+                   key=lambda s: s["qps"], default=None)
+        rows.append([r["dist"], f"{r['n']:,}", f"{r['n_clusters']}",
+                     "-" if best is None else f"{best['nprobe']}",
+                     "-" if best is None else f"{best['speedup_vs_device']:.1f}x",
+                     "-" if best is None else f"{best['recall_at10']:.3f}"])
+    C.print_table("IVF recall/throughput (fastest nprobe with recall>=0.95)",
+                  rows, ["dist", "items", "C", "nprobe", "speedup", "recall"])
+    path = C.save_json("BENCH_index_scale.json", {"results": results})
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", default="20000,50000")
+    args = ap.parse_args()
+    main(tuple(int(s) for s in args.sizes.split(",")))

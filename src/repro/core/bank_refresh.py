@@ -236,6 +236,11 @@ class RefreshScheduler:
                 time.sleep(self._debounce_s)
             try:
                 self.refresh_once()
+                # IVF re-clustering piggybacks on refresh epochs: the
+                # O(n·C) re-assignment runs HERE (its compute phase holds
+                # no locks at all), so serving never blocks on it — the
+                # sync path, by contrast, pays it inline on a query
+                self.store.ivf_maybe_recluster()
             except Exception as e:  # keep the daemon alive; dirt was requeued
                 warnings.warn(f"bank refresh epoch failed: {e!r}",
                               RuntimeWarning)

@@ -79,7 +79,9 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.distributed.collectives import topk_allgather_merge
 from repro.kernels.retrieval_topk.ops import (default_int4_impl,
                                               retrieval_topk,
-                                              retrieval_topk_int4)
+                                              retrieval_topk_int4,
+                                              retrieval_topk_int4_gathered,
+                                              retrieval_topk_int4_rows)
 from repro.kernels.retrieval_topk.ref import (retrieval_topk_int4_blocked,
                                               retrieval_topk_reference)
 
@@ -437,3 +439,53 @@ class DeviceBank:
             s, i = self._sharded_search_fn(k, impl, packed.shape[0])(
                 q, packed, scales, jnp.asarray(n, jnp.int32))
         return np.asarray(i, np.int64), np.asarray(s, np.float32)
+
+    def search_gathered(self, queries: np.ndarray, row_ids: np.ndarray,
+                        k: int, state: Optional[BankSnapshot] = None, **kw
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+        """IVF pruned scan: fused top-k over per-query CANDIDATE rows of
+        one published snapshot (``row_ids`` (Q, L) int32, -1 padded — the
+        store builds it from the index's posting lists). Device work and
+        HBM traffic scale with L, not the bank size; the gather itself is
+        int4-sized and runs inside the same jit as the scan, so the fp32
+        bank still never materializes. Ids past the snapshot's fill level
+        are masked (posting lists may run ahead of a stale generation).
+        Returns ((Q, k) GLOBAL row ids, (Q, k) scores); slots with no live
+        candidate hold id -1 / score -1e30. Single-shard int4 banks only
+        (the store falls back to the exhaustive scan otherwise)."""
+        if state is None:
+            state = self._published
+        assert state is not None, "sync() before search_gathered()"
+        if self.n_shards > 1 or not self.store_int4:
+            raise NotImplementedError(
+                "gathered pruned search needs a single-shard int4 bank")
+        k = min(k, state.n)
+        q = jnp.asarray(np.asarray(queries, np.float32))
+        s, i = retrieval_topk_int4_gathered(
+            q, state.packed, state.scales, row_ids, k, normalize=False,
+            impl=self._resolve_impl(), n_valid=state.n, **kw)
+        return np.asarray(i, np.int64), np.asarray(s, np.float32)
+
+    def search_rows(self, queries: np.ndarray, rows: np.ndarray, k: int,
+                    state: Optional[BankSnapshot] = None, **kw
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+        """IVF pruned scan, batch-union strategy: one shared candidate-row
+        set for the whole batch — a single int4-sized gather feeds the
+        SAME fused dequant-and-scan the exhaustive path runs, over
+        ``len(rows)`` instead of ``n`` rows. The caller pre-filters
+        ``rows`` to ``< state.n`` (the union comes from current posting
+        lists, the scan from one published snapshot). Returns
+        ((Q, k) GLOBAL row ids, (Q, k) scores). Requires k <= len(rows)
+        and a single-shard int4 bank."""
+        if state is None:
+            state = self._published
+        assert state is not None, "sync() before search_rows()"
+        if self.n_shards > 1 or not self.store_int4:
+            raise NotImplementedError(
+                "gathered pruned search needs a single-shard int4 bank")
+        q = jnp.asarray(np.asarray(queries, np.float32))
+        s, i = retrieval_topk_int4_rows(
+            q, state.packed, state.scales, rows, k, normalize=False,
+            impl=self._resolve_impl(), **kw)
+        rows = np.asarray(rows, np.int64)
+        return rows[np.asarray(i, np.int64)], np.asarray(s, np.float32)

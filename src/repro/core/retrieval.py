@@ -48,15 +48,19 @@ class RetrievalResult:
 
 def speculative_filter(store: EmbeddingStore,
                        query_embs: Sequence[np.ndarray], k: int, *,
-                       impl: str = "auto", freshness: Optional[str] = None
+                       impl: str = "auto", freshness: Optional[str] = None,
+                       nprobe: Optional[int] = None
                        ) -> List[Tuple[np.ndarray, np.ndarray]]:
     """Round 1: per-granularity top-k, all granularities in one fused batch.
     query_embs: list of (E,) vectors. ``freshness`` is the device-path
-    staleness override (see ``EmbeddingStore.search_batch``); round 1 is
-    where stale-serving pays off — the candidate set feeds a verify +
-    refine stage that re-scores against live embeddings anyway."""
+    staleness override and ``nprobe`` the IVF probe fan-out (see
+    ``EmbeddingStore.search_batch``); round 1 is where approximation pays
+    off — the candidate set feeds a verify + refine stage that re-scores
+    against live embeddings anyway, so both bounded staleness and coarse
+    cluster pruning cost recall, never correctness."""
     Q = np.stack([np.asarray(q, np.float32) for q in query_embs])
-    uids, scores = store.search_batch(Q, k, impl=impl, freshness=freshness)
+    uids, scores = store.search_batch(Q, k, impl=impl, freshness=freshness,
+                                      nprobe=nprobe)
     return list(zip(uids, scores))
 
 
@@ -70,6 +74,8 @@ def global_verify(rounds: List[Tuple[np.ndarray, np.ndarray]], k: int
         return np.zeros((0,), np.int64), np.zeros((0,), np.float32)
     u = np.concatenate([np.asarray(r[0], np.int64).ravel() for r in rounds])
     s = np.concatenate([np.asarray(r[1], np.float32).ravel() for r in rounds])
+    live = s > -5e29  # drop IVF padding slots (uid -1 / score -1e30)
+    u, s = u[live], s[live]
     if u.size == 0:
         return np.zeros((0,), np.int64), np.zeros((0,), np.float32)
     order = np.argsort(-s, kind="stable")
@@ -209,14 +215,15 @@ def speculative_retrieve(
         refine_fn: Optional[Callable] = None,
         refine_budget: Optional[int] = None,
         upgrade: bool = True, impl: str = "auto",
-        freshness: Optional[str] = None) -> RetrievalResult:
+        freshness: Optional[str] = None,
+        nprobe: Optional[int] = None) -> RetrievalResult:
     """Full pipeline (see module docstring for the ``refine_fn`` contract).
     ``refine_budget`` caps refinements (query latency budget, Fig. 15);
-    ``freshness`` is forwarded to the round-1 store scan (async device-bank
-    staleness policy)."""
+    ``freshness`` and ``nprobe`` are forwarded to the round-1 store scan
+    (async device-bank staleness policy / IVF probe fan-out)."""
     t0 = time.perf_counter()
     rounds = speculative_filter(store, query_embs, k, impl=impl,
-                                freshness=freshness)
+                                freshness=freshness, nprobe=nprobe)
     t1 = time.perf_counter()
     uids, _ = global_verify(rounds, k)
     if uids.size:

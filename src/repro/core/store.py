@@ -91,6 +91,10 @@ class EmbeddingStore:
         self._bank_pending_rows = 0
         self._bank_first_dirty_t: Optional[float] = None
         self._bank_refresher = None  # RefreshScheduler in async mode
+        # online IVF coarse-filter index (attach_ivf); mutations keep its
+        # assignment/posting lists in lockstep under this same lock
+        self._ivf = None
+        self.ivf_fallbacks = 0  # impl='ivf' queries served exhaustively
         self._escaped_n = 0  # rows visible to views handed out to readers
         # re-upload accounting for the non-resident kernel paths (the bytes
         # the device bank exists to eliminate; see benchmarks/store_scale.py)
@@ -125,6 +129,8 @@ class EmbeddingStore:
             setattr(self, name, new)
         self._cap = cap
         self._escaped_n = 0  # the fresh dense buffer has no outside readers
+        if self._ivf is not None:
+            self._ivf.ensure_capacity(cap)
 
     def _quantize_rows(self, embs: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
         """(B, E) fp32 -> (packed rows, scales), host-side: the numpy path is
@@ -192,6 +198,9 @@ class EmbeddingStore:
                     self._act_cache[u] = (ap[j], ascale[j], shape,
                                           int(exit_layers[j]))
             self._n = nxt
+            if self._ivf is not None:  # train then assign, one argmin each
+                self._ivf.observe(embs)
+                self._ivf.assign_rows(rows, embs, nxt)
 
     def upgrade(self, uid: int, fine_emb: np.ndarray) -> None:
         """Permanently replace a coarse embedding with its refined version."""
@@ -214,6 +223,8 @@ class EmbeddingStore:
             self._dirty[rows] = True
             self._any_dirty = True
             self._mark_bank_dirty_locked(rows)
+            if self._ivf is not None:  # content changed -> cluster may too
+                self._ivf.assign_rows(rows, embs, self._n)
             for u in uids.tolist():
                 self._act_cache.pop(u, None)  # §3.4: storage freed once refined
 
@@ -252,6 +263,8 @@ class EmbeddingStore:
                 self._dirty[last] = False
                 self._unmark_bank_dirty_locked(last)
                 self._n = last
+                if self._ivf is not None:  # assignment swaps with the row
+                    self._ivf.on_delete(row, last)
 
     # -- index ---------------------------------------------------------------
 
@@ -533,6 +546,114 @@ class EmbeddingStore:
                          self._meta["uid"][:self._n].copy())
         return bank, snap
 
+    # -- IVF coarse-filter index ---------------------------------------------
+
+    def attach_ivf(self, *, n_clusters: int = 64, nprobe: int = 8,
+                   min_rows: int = 32_768, seed: int = 0, **kw):
+        """Create (or replace) the online IVF coarse-filter index
+        (``repro.index.ivf``). Existing rows seed the centroids and are
+        assigned immediately when there are enough of them; otherwise
+        training starts from the insert stream. ``search_batch`` gains
+        ``impl='ivf'`` (pruned scan over the device bank), and ``'auto'``
+        cuts over to it once the store holds ``min_rows`` rows. Requires
+        the int4 slab layout (the pruned kernel is the fused int4 scan).
+        Returns the index."""
+        from repro.index.ivf import IVFIndex
+        assert self.store_int4, "IVF pruned search needs store_int4=True"
+        with self._lock:
+            idx = IVFIndex(self.embed_dim, n_clusters=n_clusters,
+                           nprobe=nprobe, min_rows=min_rows, seed=seed, **kw)
+            idx.ensure_capacity(self._cap)
+            if self._n:
+                self._refresh_dense_locked()
+                if self._n >= n_clusters:
+                    idx.init_from(self._dense[:self._n])
+                else:  # too few rows to seed: buffer them as training data
+                    idx.observe(self._dense[:self._n])
+                idx.assign_rows(np.arange(self._n), self._dense[:self._n],
+                                self._n)
+            self._ivf = idx
+            return idx
+
+    @property
+    def ivf_index(self):
+        """The attached IVFIndex, or None."""
+        return self._ivf
+
+    def ivf_recluster_begin(self):
+        """Phase 1 of a re-cluster job (store-side driver): take the index's
+        recluster lock (non-blocking — one job in flight across the sync
+        search path and the async refresh thread), check the trigger, and
+        snapshot under the store lock. Returns a ``ReclusterJob`` or None
+        (no index / untrained / no trigger / job already running). The
+        caller MUST finish with ``ivf_recluster_commit`` or
+        ``ivf_recluster_abort``."""
+        idx = self._ivf
+        if idx is None or not idx.recluster_lock.acquire(blocking=False):
+            return None
+        try:
+            with self._lock:
+                if not idx.trained:
+                    # late init: the index was attached before enough rows
+                    # existed and insert traffic never filled the buffer
+                    if self._n < idx.n_clusters:
+                        idx.recluster_lock.release()
+                        return None
+                    self._refresh_dense_locked()
+                    idx.init_from(self._dense[:self._n])
+                if not idx.needs_recluster():
+                    idx.recluster_lock.release()
+                    return None
+                # COW view: rows < n stay stable while compute runs unlocked
+                self._refresh_dense_locked()
+                self._escaped_n = max(self._escaped_n, self._n)
+                return idx.begin_recluster(self._dense)
+        except BaseException:
+            idx.recluster_lock.release()
+            raise
+
+    def ivf_recluster_commit(self, job) -> None:
+        """Phase 3: apply the computed assignment under the store lock and
+        release the job lock. Targets the index the JOB belongs to
+        (``job.owner``), not ``self._ivf`` — a concurrent ``attach_ivf``
+        may have swapped the attached index mid-job, and commit must not
+        touch the replacement (whose recluster_lock it does not hold)."""
+        idx = job.owner
+        try:
+            with self._lock:
+                if idx is self._ivf:
+                    idx.commit_recluster(job, self._n)
+                else:  # index was replaced mid-job: result is obsolete
+                    idx.abort_recluster()
+        finally:
+            idx.recluster_lock.release()
+
+    def ivf_recluster_abort(self, job) -> None:
+        idx = job.owner
+        try:
+            with self._lock:
+                idx.abort_recluster()
+        finally:
+            idx.recluster_lock.release()
+
+    def ivf_maybe_recluster(self) -> bool:
+        """Run one full re-cluster job if the index wants one (begin ->
+        unlocked O(n·C) argmin -> commit). The async refresh thread calls
+        this after each epoch so re-assignment piggybacks on refresh and
+        never blocks serving; in sync mode the ``impl='ivf'`` query path
+        calls it inline (sync queries already pay refresh inline)."""
+        from repro.index.ivf import IVFIndex
+        job = self.ivf_recluster_begin()
+        if job is None:
+            return False
+        try:
+            IVFIndex.compute_assignments(job)  # no locks held
+        except BaseException:
+            self.ivf_recluster_abort(job)
+            raise
+        self.ivf_recluster_commit(job)
+        return True
+
     # -- search --------------------------------------------------------------
 
     def _search_snapshot(self) -> Tuple[np.ndarray, int, np.ndarray]:
@@ -563,6 +684,7 @@ class EmbeddingStore:
 
     def search_batch(self, queries: np.ndarray, k: int, *, impl: str = "auto",
                      freshness: Optional[str] = None,
+                     nprobe: Optional[int] = None,
                      **kw) -> Tuple[np.ndarray, np.ndarray]:
         """Fused batched top-k over the whole store: queries (Q, E) ->
         (uids (Q, k), scores (Q, k)), both sorted by descending score.
@@ -577,9 +699,21 @@ class EmbeddingStore:
         backend; the latter two re-upload the fp32 slab every call. Scores
         are raw inner products (normalize=False) to match ``search``.
 
-        ``freshness`` applies to the device path under an async refresh
-        policy (``set_bank_refresh("async", ...)``): None obeys the
-        configured staleness bound, ``"fresh"`` blocks for a refresh,
+        ``impl='ivf'`` is the coarse-filtered pruned path (requires
+        ``attach_ivf``): top-``nprobe`` centroids per query, then the
+        gathered fused int4 scan over only those clusters' rows on the
+        device bank — work scales with the probed posting mass, not the
+        store size. On accelerators ``'auto'`` cuts over to it once the
+        store holds the index's ``min_rows`` (on CPU auto keeps numpy:
+        BLAS beats the pruned scan at every measured size — see
+        ``_resolve_auto_impl``). Approximate: a query returns the exact
+        top-k *of the probed clusters*; slots past a query's live
+        candidate count hold uid -1 / score -1e30. ``nprobe`` overrides
+        the index default for this call (ignored by every other impl).
+
+        ``freshness`` applies to the device and ivf paths under an async
+        refresh policy (``set_bank_refresh("async", ...)``): None obeys
+        the configured staleness bound, ``"fresh"`` blocks for a refresh,
         ``"stale"`` serves the published generation as-is. In sync mode
         (default) every device query is exact and ``freshness`` is
         ignored."""
@@ -589,9 +723,10 @@ class EmbeddingStore:
             return (np.zeros((nq, 0), np.int64),
                     np.zeros((nq, 0), np.float32))
         if impl == "auto":
-            # CPU: interpret-mode kernel loses to the host matmul; elsewhere
-            # the device-resident bank eliminates the per-query H2D upload
-            impl = "numpy" if jax.default_backend() == "cpu" else "device"
+            impl = self._resolve_auto_impl()
+        if impl == "ivf":
+            return self._search_ivf(queries, k, freshness=freshness,
+                                    nprobe=nprobe, **kw)
         if impl == "device":
             ref = self._bank_refresher
             if ref is not None:
@@ -635,6 +770,110 @@ class EmbeddingStore:
             idx = np.asarray(i, np.int64)
             top_s = np.asarray(s, np.float32)
         return uids[idx], top_s
+
+    def _resolve_auto_impl(self) -> str:
+        """``impl='auto'`` resolution (factored for direct testing — the
+        accelerator branches can't execute on a CPU-only box).
+
+        CPU: the BLAS matmul beats every kernel path including the pruned
+        scan (BENCH_store_scale: qps_numpy > qps_ivf at all sizes — the
+        gather+scan overhead outruns the FLOP savings when BLAS is this
+        cheap), so auto stays on numpy; ``impl='ivf'`` remains available
+        explicitly. Accelerators: the IVF pruned path once the store holds
+        the index's ``min_rows`` (>= 3x the exhaustive device scan there,
+        asserted in the bench); sharded banks have no gathered path yet —
+        don't cut over just to fall back."""
+        if jax.default_backend() == "cpu":
+            return "numpy"
+        if (self._ivf is not None and self._ivf.searchable(self._n)
+                and (self._bank is None or self._bank.n_shards == 1)):
+            return "ivf"
+        return "device"
+
+    def _search_ivf(self, queries: np.ndarray, k: int, *,
+                    freshness: Optional[str], nprobe: Optional[int],
+                    strategy: str = "union",
+                    **kw) -> Tuple[np.ndarray, np.ndarray]:
+        """IVF pruned scan over the device bank (see ``search_batch``).
+        Candidate rows come from the CURRENT posting lists while the scan
+        runs against ONE published snapshot: in sync mode the two are taken
+        under the same lock hold, so they agree exactly; under the async
+        policy the postings may run ahead of a stale generation — candidate
+        ids past ``snap.n`` are masked/filtered, rows deleted since the
+        flip simply drop out, both within the configured staleness
+        semantics (re-scoring in retrieval rounds 2/3 is against live rows
+        either way).
+
+        ``strategy='union'`` (default) gathers the union of every query's
+        probed clusters ONCE and feeds the batch through the standard
+        fused scan — a query may score a batchmate's candidates, which is
+        strictly a recall bonus, and the shared matmul amortizes like the
+        exhaustive path. ``'gathered'`` scans each query's own (Q, L)
+        candidate block via the per-query gathered kernel (the
+        TPU-targeted variant; no cross-query candidates)."""
+        idx_obj = self._ivf
+        if idx_obj is None:
+            raise ValueError("impl='ivf' requires attach_ivf() first")
+        if strategy not in ("union", "gathered"):
+            raise ValueError(f"ivf strategy={strategy!r}")
+        nq = len(queries)
+        ref = self._bank_refresher
+        if ref is None:
+            # sync mode pays maintenance inline on the query path (exactly
+            # like the in-lock bank refresh); async leaves it to the
+            # refresh thread, which piggybacks re-clustering on epochs
+            self.ivf_maybe_recluster()
+            with self._lock:
+                bank, snap = self._sync_bank_locked()
+                cand = (None if bank.n_shards > 1 else
+                        self._ivf_candidates_locked(queries, k, nprobe,
+                                                    strategy))
+        else:
+            snap = ref.snapshot_for_query(freshness)
+            bank = self._bank
+            with self._lock:
+                cand = (None if bank.n_shards > 1 else
+                        self._ivf_candidates_locked(queries, k, nprobe,
+                                                    strategy))
+        if snap.n == 0:
+            return (np.zeros((nq, 0), np.int64),
+                    np.zeros((nq, 0), np.float32))
+        k = min(k, snap.n)
+        if strategy == "union" and cand is not None:
+            cand = cand[cand < snap.n]  # postings ahead of a stale snap
+            if cand.size == 0:
+                cand = None
+        if cand is None or bank.n_shards > 1:
+            # untrained index (too few rows yet), empty probe set, or
+            # sharded bank (no gathered path across shards yet): serve
+            # exhaustively — correct, just not pruned
+            self.ivf_fallbacks += 1
+            ridx, top_s = bank.search(queries, k, state=snap, **kw)
+            return snap.uids[ridx], top_s
+        if strategy == "union":
+            k2 = min(k, int(cand.size))
+            gids, top_s = bank.search_rows(queries, cand, k2, state=snap,
+                                           **kw)
+            uids = snap.uids[gids]
+            if k2 < k:  # union smaller than k: pad with the sentinel
+                uids = np.pad(uids, ((0, 0), (0, k - k2)),
+                              constant_values=-1)
+                top_s = np.pad(top_s, ((0, 0), (0, k - k2)),
+                               constant_values=-1e30)
+            return uids, top_s
+        ridx, top_s = bank.search_gathered(queries, cand, k, state=snap,
+                                           **kw)
+        live = top_s > -5e29  # kernel sentinel for dead/padded slots
+        uids = np.where(live, snap.uids[np.clip(ridx, 0, snap.n - 1)], -1)
+        return uids, top_s
+
+    def _ivf_candidates_locked(self, queries, k, nprobe, strategy):
+        idx_obj = self._ivf
+        if not idx_obj.trained:
+            return None
+        if strategy == "union":
+            return idx_obj.candidate_union(queries, nprobe=nprobe)
+        return idx_obj.candidate_rows(queries, k, nprobe=nprobe)
 
     # -- accounting ----------------------------------------------------------
 

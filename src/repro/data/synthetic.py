@@ -70,6 +70,29 @@ def multimodal_pairs(seed: int, n: int, cfg: MEMConfig, d_latent: int = 16,
 # ---------------------------------------------------------------------------
 
 
+def clustered_sphere(rng: np.random.Generator, n: int,
+                     n_centers: Optional[int] = None, dim: int = 256, *,
+                     spread: float = 0.12,
+                     centers: Optional[np.ndarray] = None
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """Blob mixture on the unit sphere: the canonical clustered embedding
+    corpus shared by the IVF benchmarks and tests (one definition, so the
+    bench assertions and the tier2 recall bound measure the SAME
+    distribution). ``spread`` is per-component noise on unit-norm centers —
+    keep the noise NORM (``spread * sqrt(dim)``) below the ~sqrt(2)
+    inter-center distance or the "clusters" are effectively uniform. Pass
+    ``centers`` to draw more points (e.g. queries) from an existing
+    mixture. Returns ((n, dim) unit-norm fp32 points, the centers)."""
+    if centers is None:
+        centers = rng.standard_normal((n_centers, dim)).astype(np.float32)
+        centers /= np.linalg.norm(centers, axis=1, keepdims=True)
+    dim = centers.shape[1]
+    x = centers[rng.integers(0, len(centers), n)] + \
+        spread * rng.standard_normal((n, dim)).astype(np.float32)
+    x /= np.linalg.norm(x, axis=1, keepdims=True)
+    return x.astype(np.float32), centers
+
+
 def lm_tokens(seed: int, n_seqs: int, seq_len: int, vocab: int,
               order: int = 2) -> np.ndarray:
     rng = np.random.default_rng(seed)

@@ -1,0 +1,8 @@
+"""Coarse-filter index layer between the EmbeddingStore and the scan
+kernels (the first sub-linear search path in the repo).
+
+``repro.index.ivf`` — online mini-batch-k-means IVF quantizer + posting
+lists; ``repro.index.pruned_scan`` — probe selection, candidate-row
+building, numpy oracle and recall harness. See ``docs/index.md``.
+"""
+from repro.index.ivf import IVFIndex, ReclusterJob  # noqa: F401

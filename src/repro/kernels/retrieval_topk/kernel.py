@@ -101,6 +101,102 @@ def _topk_int4_kernel(n_ref, q_ref, p_ref, sc_ref, s_out, i_out, best_s,
         i_out[...] = best_i[...]
 
 
+def _topk_int4_gather_kernel(n_ref, q_ref, p_ref, sc_ref, id_ref, s_out,
+                             i_out, best_s, best_i, *, k: int, nl: int):
+    """Fused dequant-and-scan over PRE-GATHERED per-query candidate rows
+    (the IVF pruned-search hot path): each grid step sees a (bq, bl, E//2)
+    int4 block of one query-group's candidates plus the candidates' global
+    row ids. Dequantization happens in VMEM right before the batched
+    matmul — identical arithmetic to ``_topk_int4_kernel`` (dequant then
+    one fp32 dot over E), so per-row scores match the exhaustive scan
+    bit-for-bit. Candidates with id < 0 (padding) or id >= n_ref (rows
+    past the scanned snapshot's fill) are masked to NEG_INF."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        best_s[...] = jnp.full_like(best_s, NEG_INF)
+        best_i[...] = jnp.full_like(best_i, -1)
+
+    q = q_ref[...].astype(jnp.float32)              # (bq, E)
+    p = p_ref[...]                                  # (bq, bl, E//2) int8
+    lo = (p << 4) >> 4   # arithmetic shift sign-extends the low nibble
+    hi = p >> 4
+    bq, bl, D2 = p.shape
+    b = jnp.stack([lo, hi], axis=-1).reshape(bq, bl, 2 * D2)
+    b = b.astype(jnp.float32) * sc_ref[...]         # (bq, bl, E), VMEM only
+    # batched per-query scoring: contract E, batch over the query dim
+    s = jax.lax.dot_general(q, b, (((1,), (2,)), ((0,), (0,))),
+                            preferred_element_type=jnp.float32)  # (bq, bl)
+    ids = id_ref[...]                               # (bq, bl) int32
+    s = jnp.where((ids >= 0) & (ids < n_ref[0]), s, NEG_INF)
+
+    cat_s = jnp.concatenate([best_s[...], s], axis=1)
+    cat_i = jnp.concatenate([best_i[...], ids], axis=1)
+    new_s, sel = jax.lax.top_k(cat_s, k)
+    best_s[...] = new_s
+    best_i[...] = jnp.take_along_axis(cat_i, sel, axis=1)
+
+    @pl.when(j == nl - 1)
+    def _final():
+        s_out[...] = best_s[...]
+        i_out[...] = best_i[...]
+
+
+def retrieval_topk_int4_gathered_pallas(
+        query: jax.Array, gathered: jax.Array, gscales: jax.Array,
+        row_ids: jax.Array, k: int, *, block_q: int = 8,
+        block_l: int = 1024, interpret: Optional[bool] = None,
+        n_valid=None) -> Tuple[jax.Array, jax.Array]:
+    """Pruned-scan kernel entry: ``gathered`` (Q, L, E//2) int4 candidate
+    rows + ``gscales`` (Q, L, 1) already gathered per query (the gather is
+    int4-sized XLA work done by the dispatch wrapper inside the same jit),
+    ``row_ids`` (Q, L) the candidates' global slab rows (-1 = padding).
+    ``n_valid`` masks ids past the scanned snapshot's fill. Returns
+    ((Q, k) scores, (Q, k) global row ids) — masked slots score -1e30 with
+    id -1."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    Q, L, E2 = gathered.shape
+    E = query.shape[1]
+    bq = min(block_q, Q)
+    bl = min(block_l, L)
+    padq = (-Q) % bq
+    padl = (-L) % bl
+    if padq:
+        query = jnp.pad(query, ((0, padq), (0, 0)))
+        gathered = jnp.pad(gathered, ((0, padq), (0, 0), (0, 0)))
+        gscales = jnp.pad(gscales, ((0, padq), (0, 0), (0, 0)))
+        row_ids = jnp.pad(row_ids, ((0, padq), (0, 0)), constant_values=-1)
+    if padl:
+        gathered = jnp.pad(gathered, ((0, 0), (0, padl), (0, 0)))
+        gscales = jnp.pad(gscales, ((0, 0), (0, padl), (0, 0)))
+        row_ids = jnp.pad(row_ids, ((0, 0), (0, padl)), constant_values=-1)
+    nq = query.shape[0] // bq
+    nl = row_ids.shape[1] // bl
+    n_arr = jnp.full((1,), 2**31 - 1 if n_valid is None else n_valid,
+                     jnp.int32)
+    kernel = functools.partial(_topk_int4_gather_kernel, k=k, nl=nl)
+    scores, ids = pl.pallas_call(
+        kernel,
+        grid=(nq, nl),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM) if pltpu is not None
+                  else pl.BlockSpec((1,), lambda i, j: (0,)),
+                  pl.BlockSpec((bq, E), lambda i, j: (i, 0)),
+                  pl.BlockSpec((bq, bl, E2), lambda i, j: (i, j, 0)),
+                  pl.BlockSpec((bq, bl, 1), lambda i, j: (i, j, 0)),
+                  pl.BlockSpec((bq, bl), lambda i, j: (i, j))],
+        out_specs=[pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+                   pl.BlockSpec((bq, k), lambda i, j: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((query.shape[0], k), jnp.float32),
+                   jax.ShapeDtypeStruct((query.shape[0], k), jnp.int32)],
+        scratch_shapes=[_VMEM((bq, k), jnp.float32),
+                        _VMEM((bq, k), jnp.int32)],
+        interpret=interpret,
+    )(n_arr, query, gathered, gscales, row_ids)
+    return scores[:Q], ids[:Q]
+
+
 def retrieval_topk_int4_pallas(query: jax.Array, packed: jax.Array,
                                scales: jax.Array, k: int, *,
                                normalize: bool = False, block_q: int = 128,

@@ -19,21 +19,26 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.kernels.retrieval_topk.ref import (retrieval_topk_int4_blocked,
-                                              retrieval_topk_int4_reference,
-                                              retrieval_topk_reference)
+from repro.kernels.retrieval_topk.ref import (
+    retrieval_topk_int4_blocked, retrieval_topk_int4_gathered_blocked,
+    retrieval_topk_int4_gathered_reference, retrieval_topk_int4_reference,
+    retrieval_topk_reference)
 
 try:
     from repro.kernels.retrieval_topk import kernel as _kernel
     retrieval_topk_pallas = _kernel.retrieval_topk_pallas
     retrieval_topk_int4_pallas = _kernel.retrieval_topk_int4_pallas
+    retrieval_topk_int4_gathered_pallas = \
+        _kernel.retrieval_topk_int4_gathered_pallas
     # kernel.py imports with _VMEM=None when pallas.tpu is missing; the
     # pallas_call scratch_shapes would then crash, so treat it as absent
     _HAS_PALLAS = _kernel._VMEM is not None
 except Exception:  # pragma: no cover — pallas not in this jax build
     retrieval_topk_pallas = None
     retrieval_topk_int4_pallas = None
+    retrieval_topk_int4_gathered_pallas = None
     _HAS_PALLAS = False
 
 
@@ -193,3 +198,127 @@ def retrieval_topk_int4(query: jax.Array, packed: jax.Array,
                    jnp.asarray(scales, jnp.float32), n_arr)
     return _jitted_int4(impl, k, normalize, kwt)(query, packed, scales,
                                                  n_arr)
+
+
+# ---------------------------------------------------------------------------
+# Gathered (IVF pruned-search) fused dequant-and-scan
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=128)
+def _jitted_int4_gathered(impl: str, k: int, normalize: bool, kw: tuple):
+    """One jitted entry per (impl, k, flags). The candidate gather runs
+    INSIDE the jit so the gathered rows stay int4 (the fp32 bank never
+    materializes on any path): the pallas variant gathers with XLA then
+    dequantizes in VMEM; the xla variant streams gather+dequant per block."""
+    if impl == "pallas":
+        def fn(query, packed, scales, row_ids, n_valid):
+            safe = jnp.clip(row_ids, 0, packed.shape[0] - 1)
+            gp = jnp.take(packed, safe, axis=0)     # (Q, L, E//2) int4 bytes
+            gs = jnp.take(scales, safe, axis=0)     # (Q, L, 1)
+            return retrieval_topk_int4_gathered_pallas(
+                query, gp, gs, row_ids, k, n_valid=n_valid, **dict(kw))
+    elif impl == "xla":
+        def fn(query, packed, scales, row_ids, n_valid):
+            return retrieval_topk_int4_gathered_blocked(
+                query, packed, scales, row_ids, k, normalize=normalize,
+                n_valid=n_valid, **dict(kw))
+    else:
+        def fn(query, packed, scales, row_ids, n_valid):
+            return retrieval_topk_int4_gathered_reference(
+                query, packed, scales, row_ids, k, normalize=normalize,
+                n_valid=n_valid)
+    return jax.jit(fn)
+
+
+def retrieval_topk_int4_gathered(query: jax.Array, packed: jax.Array,
+                                 scales: jax.Array, row_ids, k: int, *,
+                                 normalize: bool = False, impl: str = "auto",
+                                 interpret: Optional[bool] = None,
+                                 n_valid: Optional[int] = None,
+                                 **kw) -> Tuple[jax.Array, jax.Array]:
+    """Fused top-k over per-query CANDIDATE rows of a packed int4 bank (the
+    IVF pruned-search scan): ``row_ids`` (Q, L) int32 names each query's
+    candidate slab rows, -1 entries are padding. Work and HBM traffic scale
+    with L, not the bank size. Same (packed, scales) layout and dispatch
+    contract as ``retrieval_topk_int4``; ``n_valid`` additionally masks ids
+    past a snapshot's fill level (posting lists can run ahead of a stale
+    bank generation). Returns ((Q, k) scores, (Q, k) GLOBAL row ids);
+    slots with no live candidate score -1e30 (callers map them to uid -1).
+    The ``normalize`` flag is honored by the xla/ref paths only (the store
+    scans with raw inner products everywhere)."""
+    impl, kwt = _int4_dispatch_key(impl, interpret, k, normalize, kw)
+    if impl == "pallas" and normalize:
+        raise ValueError("gathered pallas path scans raw inner products; "
+                         "normalize=True is only supported on impl='xla'/"
+                         "'ref'")
+    row_ids = jnp.asarray(row_ids, jnp.int32)
+    if row_ids.shape[1] < k:  # top-k needs >= k columns; -1 pads are masked
+        row_ids = jnp.pad(row_ids,
+                          ((0, 0), (0, k - row_ids.shape[1])),
+                          constant_values=-1)
+    n_arr = jnp.asarray(packed.shape[0] if n_valid is None else n_valid,
+                        jnp.int32)
+    return _jitted_int4_gathered(impl, k, normalize, kwt)(
+        query, packed, scales, row_ids, n_arr)
+
+
+@functools.lru_cache(maxsize=128)
+def _jitted_int4_rows(impl: str, k: int, normalize: bool, kw: tuple):
+    """Batch-shared candidate scan: gather the (padded) candidate rows ONCE
+    for the whole query batch — int4-sized traffic — then run the standard
+    fused dequant-and-scan over the gathered slab. Reuses the exhaustive
+    kernels verbatim (pallas dequants the gathered block in VMEM), so the
+    per-row arithmetic is identical to the full scan's."""
+    if impl == "pallas":
+        def fn(query, packed, scales, rows, m):
+            gp = jnp.take(packed, rows, axis=0)
+            gs = jnp.take(scales, rows, axis=0)
+            return retrieval_topk_int4_pallas(query, gp, gs, k,
+                                              normalize=normalize,
+                                              n_valid=m, **dict(kw))
+    elif impl == "xla":
+        def fn(query, packed, scales, rows, m):
+            gp = jnp.take(packed, rows, axis=0)
+            gs = jnp.take(scales, rows, axis=0)
+            return retrieval_topk_int4_blocked(query, gp, gs, k,
+                                               normalize=normalize,
+                                               n_valid=m, **dict(kw))
+    else:
+        def fn(query, packed, scales, rows, m):
+            gp = jnp.take(packed, rows, axis=0)
+            gs = jnp.take(scales, rows, axis=0)
+            return retrieval_topk_int4_reference(query, gp, gs, k,
+                                                 normalize=normalize,
+                                                 n_valid=m)
+    return jax.jit(fn)
+
+
+def retrieval_topk_int4_rows(query: jax.Array, packed: jax.Array,
+                             scales: jax.Array, rows, k: int, *,
+                             normalize: bool = False, impl: str = "auto",
+                             interpret: Optional[bool] = None,
+                             **kw) -> Tuple[jax.Array, jax.Array]:
+    """Fused top-k over ONE shared candidate-row set for the whole query
+    batch (the IVF batch-union strategy): ``rows`` (m,) int32 names the
+    candidate slab rows, shared by every query. The rows are padded to a
+    power-of-two bucket here (pad slots masked via the kernels' n_valid
+    scalar, so the jit retraces O(log) shapes as the union grows) and
+    gathered inside the jit. Returns ((Q, k) scores, (Q, k) LOCAL indices
+    into ``rows``) — callers map back via ``rows[ids]``. Requires
+    ``k <= len(rows)``."""
+    impl, kwt = _int4_dispatch_key(impl, interpret, k, normalize, kw)
+    rows = np.asarray(rows, np.int32).ravel()
+    m = rows.size
+    assert 0 < k <= m, (k, m)
+    # pow2 buckets, refined with the 3/4 step above 8k (scan cost tracks
+    # the PADDED size, so a 21k union should not pay for 32k rows; still
+    # only ~2 traced shapes per octave)
+    bucket = 1 << (max(m, k) - 1).bit_length()
+    if bucket >= 8192 and max(m, k) <= 3 * bucket // 4:
+        bucket = 3 * bucket // 4
+    if bucket > m:  # pad slots gather row 0 and are masked by n_valid=m
+        rows = np.concatenate([rows, np.zeros(bucket - m, np.int32)])
+    return _jitted_int4_rows(impl, k, normalize, kwt)(
+        query, packed, scales, jnp.asarray(rows),
+        jnp.asarray(m, jnp.int32))

@@ -41,6 +41,90 @@ def retrieval_topk_int4_reference(query: jax.Array, packed: jax.Array,
                                     n_valid=n_valid)
 
 
+def _dequant_rows(packed_rows: jax.Array, scales_rows: jax.Array) -> jax.Array:
+    """(..., D2) int8 nibble rows + (..., 1) scales -> (..., 2*D2) fp32."""
+    lo = (packed_rows << 4) >> 4  # arithmetic shift sign-extends low nibble
+    hi = packed_rows >> 4
+    b = jnp.stack([lo, hi], axis=-1)
+    b = b.reshape(b.shape[:-2] + (2 * packed_rows.shape[-1],))
+    return b.astype(jnp.float32) * scales_rows
+
+
+def retrieval_topk_int4_gathered_reference(
+        query: jax.Array, packed: jax.Array, scales: jax.Array,
+        row_ids: jax.Array, k: int, *, normalize: bool = False,
+        n_valid=None) -> Tuple[jax.Array, jax.Array]:
+    """Oracle for the IVF pruned scan: per-query candidate rows ``row_ids``
+    (Q, L) int32 are gathered from the packed slab, dequantized in full, and
+    scored densely. Entries with ``row_ids < 0`` (padding) or
+    ``>= n_valid`` (rows past the snapshot fill, e.g. posting lists newer
+    than a stale bank generation) are masked to -1e30; when a query has
+    fewer than ``k`` live candidates the trailing outputs keep that
+    sentinel score (callers map them to uid -1). Returned ids are the
+    *global* slab row indices. Materializes the gathered fp32 rows —
+    correctness baseline only."""
+    n_arr = jnp.asarray(packed.shape[0] if n_valid is None else n_valid,
+                        jnp.int32)
+    safe = jnp.clip(row_ids, 0, packed.shape[0] - 1)
+    b = _dequant_rows(jnp.take(packed, safe, axis=0),
+                      jnp.take(scales, safe, axis=0))        # (Q, L, E)
+    q = query.astype(jnp.float32)
+    if normalize:
+        q = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-8)
+        b = b / jnp.maximum(jnp.linalg.norm(b, axis=-1, keepdims=True), 1e-8)
+    s = jnp.einsum("qe,qle->ql", q, b)
+    live = (row_ids >= 0) & (row_ids < n_arr)
+    s = jnp.where(live, s, -1e30)
+    scores, sel = jax.lax.top_k(s, k)
+    ids = jnp.take_along_axis(row_ids.astype(jnp.int32), sel, axis=1)
+    return scores, ids
+
+
+def retrieval_topk_int4_gathered_blocked(
+        query: jax.Array, packed: jax.Array, scales: jax.Array,
+        row_ids: jax.Array, k: int, *, normalize: bool = False,
+        block_l: int = 2048, n_valid=None) -> Tuple[jax.Array, jax.Array]:
+    """Compiled (jnp/XLA) streaming variant of the gathered oracle: the
+    candidate list is scanned one (Q, bl) block at a time — gather, dequant,
+    score, merge into a running (Q, k) best set — so neither the gathered
+    fp32 rows nor the (Q, L) score matrix ever materializes. Same masking
+    contract as the reference (pad rows < 0, snapshot mask via
+    ``n_valid``)."""
+    q = query.astype(jnp.float32)
+    if normalize:
+        q = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-8)
+    Q, L = row_ids.shape
+    bl = max(min(block_l, L), 1)
+    pad = (-L) % bl
+    if pad:  # -1 padding is masked like any other dead candidate
+        row_ids = jnp.pad(row_ids, ((0, 0), (0, pad)), constant_values=-1)
+    n_arr = jnp.asarray(packed.shape[0] if n_valid is None else n_valid,
+                        jnp.int32)
+    nl = row_ids.shape[1] // bl
+    ids3 = row_ids.reshape(Q, nl, bl).transpose(1, 0, 2)     # (nl, Q, bl)
+
+    def body(carry, ids_b):
+        best_s, best_i = carry
+        safe = jnp.clip(ids_b, 0, packed.shape[0] - 1)
+        b = _dequant_rows(jnp.take(packed, safe, axis=0),
+                          jnp.take(scales, safe, axis=0))    # (Q, bl, E)
+        if normalize:
+            b = b / jnp.maximum(jnp.linalg.norm(b, axis=-1, keepdims=True),
+                                1e-8)
+        s = jnp.einsum("qe,qle->ql", q, b)                   # (Q, bl)
+        live = (ids_b >= 0) & (ids_b < n_arr)
+        s = jnp.where(live, s, -1e30)
+        cat_s = jnp.concatenate([best_s, s], axis=1)
+        cat_i = jnp.concatenate([best_i, ids_b.astype(jnp.int32)], axis=1)
+        new_s, sel = jax.lax.top_k(cat_s, k)
+        return (new_s, jnp.take_along_axis(cat_i, sel, axis=1)), None
+
+    init = (jnp.full((Q, k), -1e30, jnp.float32),
+            jnp.full((Q, k), -1, jnp.int32))
+    (scores, ids), _ = jax.lax.scan(body, init, ids3)
+    return scores, ids
+
+
 def retrieval_topk_int4_blocked(query: jax.Array, packed: jax.Array,
                                 scales: jax.Array, k: int, *,
                                 normalize: bool = False, block_n: int = 4096,

@@ -29,7 +29,9 @@ from repro.serving.query import QueryEngine
 def build_service(spec, *, n_train: int = 256, seed: int = 0, policy="recall",
                   params=None, lora=None, fw_kw=None, search_impl="auto",
                   search_devices=None, bank_refresh="sync",
-                  bank_max_lag_rows=None, bank_max_lag_ms=None):
+                  bank_max_lag_rows=None, bank_max_lag_ms=None,
+                  index="none", index_clusters=64, index_min_rows=None,
+                  nprobe=None):
     """Train the pre-exit predictor from self-supervised labels, then stand up
     the embedding + query engines."""
     cfg, recall = spec.model, spec.recall
@@ -62,7 +64,9 @@ def build_service(spec, *, n_train: int = 256, seed: int = 0, policy="recall",
                         search_devices=search_devices,
                         bank_refresh=bank_refresh,
                         bank_max_lag_rows=bank_max_lag_rows,
-                        bank_max_lag_ms=bank_max_lag_ms)
+                        bank_max_lag_ms=bank_max_lag_ms,
+                        index=index, index_clusters=index_clusters,
+                        index_min_rows=index_min_rows, nprobe=nprobe)
     return engine, query, {"predictor": stats, "labels": np.asarray(labels)}
 
 
@@ -78,10 +82,15 @@ def main():
                     help="serve queries one at a time instead of one "
                          "query_batch drain")
     ap.add_argument("--search-impl", default="auto",
-                    choices=["auto", "numpy", "pallas", "xla", "device"],
+                    choices=["auto", "numpy", "pallas", "xla", "device",
+                             "ivf"],
                     help="store scan backend; 'device' keeps the int4 slab "
                          "resident on device (auto picks it on accelerators) "
-                         "and shards it across --search-shards devices")
+                         "and shards it across --search-shards devices; "
+                         "'ivf' forces the pruned coarse-filter scan "
+                         "(needs --index ivf; on accelerators auto picks "
+                         "it past --index-min-rows, on CPU only this "
+                         "explicit choice uses it)")
     ap.add_argument("--search-shards", type=int, default=0,
                     help="shard the device bank across this many devices "
                          "(0 = all local devices when --search-impl=device)")
@@ -98,6 +107,20 @@ def main():
     ap.add_argument("--bank-max-lag-ms", type=float, default=None,
                     help="async only: max age in ms of the oldest "
                          "unpublished write before a query blocks")
+    ap.add_argument("--index", default="none", choices=["none", "ivf"],
+                    help="coarse-filter index: 'ivf' maintains an online "
+                         "mini-batch-k-means quantizer + posting lists and "
+                         "serves queries by pruned (top-nprobe clusters) "
+                         "scan once the store passes --index-min-rows")
+    ap.add_argument("--index-clusters", type=int, default=64,
+                    help="IVF cluster count (coarse codebook size)")
+    ap.add_argument("--index-min-rows", type=int, default=None,
+                    help="row count where search impl='auto' cuts over to "
+                         "the pruned IVF path (default: the index's "
+                         "32768; small demos want a lower value)")
+    ap.add_argument("--nprobe", type=int, default=None,
+                    help="IVF clusters probed per query (default: the "
+                         "index's 8; higher = better recall, more scan)")
     args = ap.parse_args()
 
     spec = get_arch(args.arch)
@@ -111,7 +134,11 @@ def main():
                                         search_devices=devices,
                                         bank_refresh=args.bank_refresh,
                                         bank_max_lag_rows=args.bank_max_lag,
-                                        bank_max_lag_ms=args.bank_max_lag_ms)
+                                        bank_max_lag_ms=args.bank_max_lag_ms,
+                                        index=args.index,
+                                        index_clusters=args.index_clusters,
+                                        index_min_rows=args.index_min_rows,
+                                        nprobe=args.nprobe)
     print(f"predictor: {info['predictor']}")
 
     data = SYN.multimodal_pairs(1, args.n_items, spec.model)
@@ -140,6 +167,9 @@ def main():
     print(f"R@1 (untrained model, sanity only): {hits / nq:.2f}")
     if engine.store.device_bank is not None:
         print(f"device bank: {engine.store.device_bank.stats()}")
+    if engine.store.ivf_index is not None:
+        print(f"ivf index: {engine.store.ivf_index.stats()}, "
+              f"fallbacks={engine.store.ivf_fallbacks}")
     ref = engine.store.bank_refresher
     if ref is not None:
         print(f"bank refresh: async, epochs={ref.n_epochs}, "

@@ -43,7 +43,10 @@ class QueryEngine:
                  search_devices=None, bank_refresh: str = "sync",
                  bank_max_lag_rows: Optional[int] = None,
                  bank_max_lag_ms: Optional[float] = None,
-                 freshness: Optional[str] = None):
+                 freshness: Optional[str] = None, index: str = "none",
+                 index_clusters: int = 64,
+                 index_min_rows: Optional[int] = None,
+                 nprobe: Optional[int] = None):
         from repro.models import imagebind as IB
         self.params, self.cfg, self.recall = params, cfg, recall
         self.store = store
@@ -55,6 +58,27 @@ class QueryEngine:
         # per-query default for the async staleness policy (None = obey the
         # configured bound; "fresh"/"stale" force a side)
         self.freshness = freshness
+        # IVF probe fan-out forwarded to every store scan (None = the
+        # index's configured default; ignored on non-IVF paths)
+        self.nprobe = nprobe
+        # coarse-filter index: "ivf" attaches the online IVF quantizer so
+        # search_batch(impl='auto') cuts over to the pruned path at
+        # index_min_rows; an index someone already attached is reused
+        # (attach kwargs win only when we create it here)
+        if index == "ivf":
+            if store.ivf_index is None:
+                ivf_kw = {"n_clusters": index_clusters}
+                if index_min_rows is not None:
+                    ivf_kw["min_rows"] = index_min_rows
+                if nprobe is not None:
+                    ivf_kw["nprobe"] = nprobe
+                store.attach_ivf(**ivf_kw)
+        elif index != "none":
+            raise ValueError(f"index={index!r}")
+        if search_impl == "ivf" and store.ivf_index is None:
+            raise ValueError("search_impl='ivf' needs an attached IVF "
+                             "index (pass index='ivf' or attach_ivf "
+                             "beforehand)")
         # device-resident bank: attach eagerly so the warm-up upload happens
         # at engine construction, not on the first query. An explicit device
         # list always (re)attaches — a bank auto-attached earlier over
@@ -115,7 +139,7 @@ class QueryEngine:
             self.store, [by_g[g] for g in self.granularities], fine,
             k=k, final_k=final_k, refine_fn=self.refine_fn,
             refine_budget=refine_budget, impl=self.search_impl,
-            freshness=self.freshness)
+            freshness=self.freshness, nprobe=self.nprobe)
 
     # -- batched queries -----------------------------------------------------
 
@@ -136,10 +160,16 @@ class QueryEngine:
         if not speculative:
             uids, scores = self.store.search_batch(fine_q, k,
                                                    impl=self.search_impl,
-                                                   freshness=self.freshness)
+                                                   freshness=self.freshness,
+                                                   nprobe=self.nprobe)
             dt = (time.perf_counter() - t0) / B
-            return [RetrievalResult(uids=uids[b], scores=scores[b],
-                                    filtered_uids=uids[b], n_refined=0,
+            # drop IVF padding slots (uid -1 / score -1e30): no exhaustive
+            # path ever emits them, so callers must never see them here
+            live = scores > -5e29
+            return [RetrievalResult(uids=uids[b][live[b]],
+                                    scores=scores[b][live[b]],
+                                    filtered_uids=uids[b][live[b]],
+                                    n_refined=0,
                                     latency_s=dt, per_round_s={})
                     for b in range(B)]
 
@@ -148,7 +178,7 @@ class QueryEngine:
         # re-score the candidates against live embeddings anyway)
         flat_u, flat_s = self.store.search_batch(
             QG.reshape(B * G, -1), k, impl=self.search_impl,
-            freshness=self.freshness)
+            freshness=self.freshness, nprobe=self.nprobe)
         kk = flat_u.shape[1]
         u3 = flat_u.reshape(B, G, kk)
         s3 = flat_s.reshape(B, G, kk)

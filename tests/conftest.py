@@ -2,17 +2,28 @@
 --xla_force_host_platform_device_count — smoke tests and benches must see one
 device; multi-device tests spawn subprocesses with their own XLA_FLAGS.
 
-When ``hypothesis`` is not installed (it is an optional dev dep, see
-requirements-dev.txt) a minimal deterministic fallback is registered in
+Hypothesis handling: the REAL package wins whenever it is importable
+(``requirements-dev.txt`` pins it; CI installs it). Only when it is
+genuinely absent — decided via ``importlib.util.find_spec`` BEFORE any
+import attempt, so a broken half-install raises loudly instead of silently
+degrading — does a minimal deterministic fallback get registered in
 ``sys.modules`` so the property-test modules still collect and run: each
 ``@given`` test executes ``max_examples`` times with seeded random draws
 covering the subset of the strategy API this repo uses (integers / floats /
-lists). Caveats vs real hypothesis: no shrinking, and the stub wrapper hides
-the test signature, so combining ``@given`` with pytest fixtures is NOT
+lists / sampled_from). ``REPRO_HYPOTHESIS=stub`` forces the fallback (to
+reproduce stub-mode behavior on a box that has the real package);
+``REPRO_HYPOTHESIS=real`` hard-fails when the package is missing instead
+of degrading (CI sets this so the pinned dep can never rot silently).
+Caveats vs real hypothesis: no shrinking, and the stub wrapper hides the
+test signature, so combining ``@given`` with pytest fixtures is NOT
 supported (no repo test does this today — keep it that way or install the
-real package).
+real package). Under the real package a ``repro`` settings profile
+(deadline=None: shared CI boxes stall arbitrarily) is registered and
+loaded.
 """
 import functools
+import importlib.machinery
+import importlib.util
 import os
 import sys
 import types
@@ -81,14 +92,30 @@ def _install_hypothesis_fallback():
     mod.settings = settings
     mod.strategies = strategies
     mod.__stub__ = True
+    # a real ModuleSpec keeps importlib.util.find_spec(...) working after
+    # the stub lands in sys.modules (it would raise on __spec__ = None)
+    mod.__spec__ = importlib.machinery.ModuleSpec("hypothesis", None)
+    strategies.__spec__ = importlib.machinery.ModuleSpec(
+        "hypothesis.strategies", None)
     sys.modules["hypothesis"] = mod
     sys.modules["hypothesis.strategies"] = strategies
 
 
-try:
-    import hypothesis  # noqa: F401
-except ImportError:
+_HYP_MODE = os.environ.get("REPRO_HYPOTHESIS", "auto")
+_HAVE_REAL = importlib.util.find_spec("hypothesis") is not None
+if _HYP_MODE == "real" and not _HAVE_REAL:
+    raise ImportError(
+        "REPRO_HYPOTHESIS=real but the hypothesis package is not "
+        "installed (pip install -r requirements-dev.txt)")
+if _HYP_MODE == "stub" or not _HAVE_REAL:
     _install_hypothesis_fallback()
+else:
+    # real package: register a CI-safe profile (per-example deadlines flake
+    # on shared boxes; example counts are already pinned per test)
+    from hypothesis import settings as _hyp_settings
+    _hyp_settings.register_profile("repro", deadline=None,
+                                   print_blob=True)
+    _hyp_settings.load_profile("repro")
 
 
 @pytest.fixture(scope="session")

@@ -16,6 +16,22 @@ Actors (one step per schedule token):
     so a writer or scanner step can land between any two phases.
   * ``S`` — scanner: one ``store.search_batch(impl="device")`` against the
     published snapshot, recording which generation it served.
+  * ``C`` — re-clusterer (``ivf=True`` scenarios only): advances an IVF
+    re-cluster job by ONE phase — ``ivf_recluster_begin`` (reseed +
+    snapshot under the lock), ``compute_assignments`` (the unlocked
+    O(n·C) argmin), ``ivf_recluster_commit`` — so writers land inside the
+    compute window and the commit must not clobber their fresher
+    assignments.
+
+``ivf=True`` scenarios scan ``impl="ivf"`` with ``nprobe = n_clusters``
+(probe everything): the pruned path then covers exactly the assigned rows,
+so a fresh scan must return the same (uid, score) SET as the sync oracle —
+per-row scores are bit-identical (same gathered dequant+dot arithmetic),
+only the candidate order differs with the clustering, so the comparison
+canonicalizes by uid. After EVERY token the posting-list/assignment/uid-
+index consistency contract is asserted (``IVFIndex.check_consistency``):
+assign[:n] covers exactly the live rows, the CSR partitions it, the tail
+is clear — under any interleaving of mutations with re-cluster phases.
 
 Invariants asserted on EVERY schedule:
   1. *No torn generations, bit-identical results*: each scan's (uids,
@@ -112,7 +128,8 @@ class ConcurrencyScenario:
                  n_queries: int = 3, k: int = 5, seed: int = 0,
                  script: Optional[List[tuple]] = None,
                  max_lag_rows: Optional[int] = None,
-                 freshness: Optional[str] = "stale"):
+                 freshness: Optional[str] = "stale",
+                 ivf: bool = False, ivf_clusters: int = 4):
         rng = np.random.default_rng(seed)
         self.E = embed_dim
         self.k = k
@@ -124,6 +141,8 @@ class ConcurrencyScenario:
                                                                     embed_dim)
         self.max_lag_rows = max_lag_rows
         self.freshness = freshness
+        self.ivf = ivf
+        self.ivf_clusters = ivf_clusters
         self._oracle: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
 
     # -- store / oracle -----------------------------------------------------
@@ -132,18 +151,57 @@ class ConcurrencyScenario:
         st = EmbeddingStore(self.E, capacity=8)
         n = len(self.init_embs)
         st.add_batch(np.arange(n), self.init_embs, np.zeros(n), np.ones(n))
+        if self.ivf:
+            # min_rows=1: the auto cutover threshold is irrelevant here —
+            # scans force impl="ivf"; nprobe = C probes every cluster so a
+            # fresh scan covers all assigned rows (exhaustive-equivalent)
+            st.attach_ivf(n_clusters=self.ivf_clusters,
+                          nprobe=self.ivf_clusters, min_rows=1,
+                          train_batch=64)
         for m in self.script[:prefix_len]:
             apply_mutation(st, m)
         return st
 
+    @property
+    def _scan_impl(self) -> str:
+        return "ivf" if self.ivf else "device"
+
     def oracle(self, prefix_len: int) -> Tuple[np.ndarray, np.ndarray]:
         """Sync-refresh reference: store replayed to ``prefix_len``
-        mutations, scanned by the exact same device path."""
+        mutations, scanned by the exact same path (device, or the pruned
+        IVF scan at full nprobe for ivf scenarios)."""
         if prefix_len not in self._oracle:
             st = self.build_store(prefix_len)
             self._oracle[prefix_len] = st.search_batch(
-                self.queries, self.k, impl="device")
+                self.queries, self.k, impl=self._scan_impl)
         return self._oracle[prefix_len]
+
+    @staticmethod
+    def _canon(uids: np.ndarray, scores: np.ndarray):
+        """Canonicalize a scan result for clustering-order-independent
+        comparison: per query, sort the (uid, score) pairs by uid."""
+        order = np.argsort(uids, axis=1, kind="stable")
+        return (np.take_along_axis(uids, order, axis=1),
+                np.take_along_axis(scores, order, axis=1))
+
+    def _scan_equal(self, a: Tuple[np.ndarray, np.ndarray],
+                    b: Tuple[np.ndarray, np.ndarray]) -> bool:
+        """Device scans must match bit-for-bit INCLUDING order; IVF scans
+        compare as uid-sorted pairs (the per-row scores are still exact —
+        only the candidate order tracks the clustering)."""
+        if not self.ivf:
+            return (np.array_equal(a[0], b[0]) and
+                    np.array_equal(a[1], b[1]))
+        ua, sa = self._canon(*a)
+        ub, sb = self._canon(*b)
+        return np.array_equal(ua, ub) and np.array_equal(sa, sb)
+
+    def _check_ivf_state(self, st: EmbeddingStore) -> None:
+        """Posting-list consistency contract, asserted after every token."""
+        if st.ivf_index is not None:
+            st.ivf_index.check_consistency(
+                len(st), st.rows_of(st.uids()) if len(st) else
+                np.zeros(0, np.int64))
 
     # -- schedule execution -------------------------------------------------
 
@@ -164,13 +222,31 @@ class ConcurrencyScenario:
         phase = 0
         epoch_prefix = 0
         begin_copy = None
-        stats = {"scans": 0, "flips": 0, "stale_scans": 0, "schedule":
-                 "".join(tokens)}
+        c_job = None
+        c_phase = 0
+        stats = {"scans": 0, "flips": 0, "stale_scans": 0, "reclusters": 0,
+                 "schedule": "".join(tokens)}
 
         for t in tokens:
             if t == "W":
                 apply_mutation(st, self.script[writes])
                 writes += 1
+            elif t == "C":
+                # one IVF re-cluster phase per token: begin (may be a no-op
+                # when nothing triggers) -> unlocked compute -> commit
+                assert self.ivf, "C tokens need an ivf=True scenario"
+                if c_phase == 0:
+                    c_job = st.ivf_recluster_begin()
+                    if c_job is not None:
+                        c_phase = 1
+                elif c_phase == 1:
+                    st.ivf_index.compute_assignments(c_job)
+                    c_phase = 2
+                else:
+                    st.ivf_recluster_commit(c_job)
+                    stats["reclusters"] += 1
+                    c_job = None
+                    c_phase = 0
             elif t == "R":
                 if phase == 0:
                     epoch_prefix = writes
@@ -211,7 +287,8 @@ class ConcurrencyScenario:
                     epoch = None
                     phase = 0
                 g0 = bank.generation
-                u, s = st.search_batch(self.queries, self.k, impl="device",
+                u, s = st.search_batch(self.queries, self.k,
+                                       impl=self._scan_impl,
                                        freshness=self.freshness)
                 g1 = bank.generation
                 if g1 != g0:  # the policy blocked: inline refresh to "now"
@@ -219,11 +296,18 @@ class ConcurrencyScenario:
                 served = g1
                 if gen_to_prefix[served] < writes:
                     stats["stale_scans"] += 1
-                ou, os = self.oracle(gen_to_prefix[served])
-                assert np.array_equal(u, ou) and np.array_equal(s, os), (
-                    f"scan at generation {served} (prefix "
-                    f"{gen_to_prefix[served]}) not bit-identical to the "
-                    f"sync oracle under schedule {''.join(tokens)!r}")
+                if not self.ivf or gen_to_prefix[served] == writes:
+                    # ivf: posting lists are always CURRENT, so only a scan
+                    # of the current-prefix generation maps onto a single
+                    # oracle prefix (a stale generation under newer
+                    # postings is a hybrid by design — its structural
+                    # consistency is asserted below instead)
+                    assert self._scan_equal((u, s),
+                                            self.oracle(
+                                                gen_to_prefix[served])), (
+                        f"scan at generation {served} (prefix "
+                        f"{gen_to_prefix[served]}) diverged from the "
+                        f"sync oracle under schedule {''.join(tokens)!r}")
                 if self.freshness is None and self.max_lag_rows is not None:
                     lag_rows, _ = ref.lag()
                     assert lag_rows <= self.max_lag_rows, (
@@ -232,13 +316,34 @@ class ConcurrencyScenario:
                 stats["scans"] += 1
             else:
                 raise ValueError(t)
+            if self.ivf:  # structural contract holds after EVERY step
+                self._check_ivf_state(st)
 
-        # drain: the remaining dirt must converge on the full-script state
+        # drain: finish any in-flight refresh epoch first — its begin
+        # already consumed the dirty slice, so abandoning it would lose
+        # rows (production's scheduler always completes epochs; a schedule
+        # can end mid-epoch when an S-token's blocking wait completed an
+        # earlier epoch and re-phased the R tokens)
+        if epoch is not None:
+            if phase == 1:
+                ref.apply(epoch)
+            snap = ref.flip(epoch)
+            gen_to_prefix[snap.generation] = epoch_prefix
+            self._check_flip(snap, begin_copy)
+            stats["flips"] += 1
+            epoch = None
+        # ... then any in-flight re-cluster job (its lock is held),
+        # then the remaining dirt must converge on the full-script state
+        if c_job is not None:
+            if c_phase == 1:
+                st.ivf_index.compute_assignments(c_job)
+            st.ivf_recluster_commit(c_job)
+            stats["reclusters"] += 1
+            self._check_ivf_state(st)
         ref.refresh_once()
-        u, s = st.search_batch(self.queries, self.k, impl="device",
+        u, s = st.search_batch(self.queries, self.k, impl=self._scan_impl,
                                freshness="stale")
-        ou, os = self.oracle(writes)
-        assert np.array_equal(u, ou) and np.array_equal(s, os), (
+        assert self._scan_equal((u, s), self.oracle(writes)), (
             f"post-drain scan diverged from the oracle under schedule "
             f"{''.join(tokens)!r}")
         return stats

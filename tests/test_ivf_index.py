@@ -1,0 +1,371 @@
+"""IVF coarse-filter index: kernel parity, posting-list consistency, store
+integration (impl='ivf' + auto cutover), re-cluster interleavings, and the
+tier2 statistical recall bound.
+
+The structural contract under test (also enumerated exhaustively by the
+concurrency harness): posting lists are a partition of the assigned rows
+that stays bit-consistent with the uid->row index through any interleaving
+of add/upgrade/delete/re-cluster; the pruned scan at full nprobe is
+set-identical to the exhaustive scan; at pruned nprobe it trades recall —
+never correctness — and recall@10 >= 0.95 at the documented operating
+points.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.quantize import dequantize_int4_np, quantize_int4_np
+from repro.core.store import EmbeddingStore
+from repro.index.ivf import IVFIndex, assign_l2
+from repro.index.pruned_scan import (build_candidate_rows, pruned_search_numpy,
+                                     recall_at_k, select_probes)
+from repro.kernels.retrieval_topk.ops import retrieval_topk_int4_gathered
+
+E = 32
+
+
+def _clustered(rng, n, n_centers=10, spread=0.12, E=E):
+    # one shared generator with the benchmarks: the tier2 recall bound and
+    # the bench assertions must measure the SAME distribution
+    from repro.data.synthetic import clustered_sphere
+    return clustered_sphere(rng, n, n_centers, E, spread=spread)
+
+
+def _exact_topk(dense, uids, queries, k):
+    s = queries @ dense.T
+    idx = np.argsort(-s, axis=1)[:, :k]
+    return uids[idx]
+
+
+# -- gathered kernel family ---------------------------------------------------
+
+
+@pytest.mark.parametrize("impl", ["ref", "xla", "pallas"])
+@pytest.mark.parametrize("L,block", [(5, 2048), (200, 64)])
+def test_gathered_topk_matches_numpy_oracle(impl, L, block):
+    rng = np.random.default_rng(0)
+    N, Q, k = 300, 7, 6
+    embs = rng.standard_normal((N, E)).astype(np.float32)
+    packed, scales = quantize_int4_np(embs)
+    dense = dequantize_int4_np(packed, scales)
+    q = rng.standard_normal((Q, E)).astype(np.float32)
+    ids = np.full((Q, L), -1, np.int32)
+    for i in range(Q):
+        m = int(rng.integers(1, L + 1))
+        ids[i, :m] = rng.choice(N, min(m, N), replace=False)[:m]
+    n_valid = 250  # ids >= n_valid simulate posting lists ahead of a snapshot
+    kw = {"block_l": block} if impl != "ref" else {}
+    s, ii = retrieval_topk_int4_gathered(
+        jnp.asarray(q), jnp.asarray(packed), jnp.asarray(scales), ids, k,
+        impl=impl, n_valid=n_valid, **kw)
+    s, ii = np.asarray(s), np.asarray(ii)
+    for qi in range(Q):
+        cand = ids[qi][(ids[qi] >= 0) & (ids[qi] < n_valid)]
+        want = cand[np.argsort(-(dense[cand] @ q[qi]))][:k]
+        m = len(want)
+        assert set(ii[qi][:m].tolist()) == set(want.tolist())
+        np.testing.assert_allclose(s[qi][:m],
+                                   np.sort(dense[want] @ q[qi])[::-1],
+                                   rtol=1e-5, atol=1e-5)
+        if m < k:  # dead slots carry the SCORE sentinel (ids unspecified:
+            # -1 padding or a masked real id — consumers key off the score)
+            assert (s[qi][m:] <= -1e29).all()
+
+
+def test_gathered_topk_pads_short_candidate_lists():
+    # L < k must not crash the dense-oracle path (top_k needs k columns)
+    rng = np.random.default_rng(1)
+    embs = rng.standard_normal((20, E)).astype(np.float32)
+    packed, scales = quantize_int4_np(embs)
+    ids = np.array([[3, 5]], np.int32)  # 2 candidates, k=4
+    s, ii = retrieval_topk_int4_gathered(
+        jnp.asarray(np.ones((1, E), np.float32)), jnp.asarray(packed),
+        jnp.asarray(scales), ids, 4, impl="ref", n_valid=20)
+    assert np.asarray(s).shape == (1, 4)
+    assert (np.asarray(s)[0, 2:] <= -1e29).all()
+
+
+# -- index structure ----------------------------------------------------------
+
+
+def test_minibatch_training_and_probe_selection():
+    rng = np.random.default_rng(2)
+    data, centers = _clustered(rng, 1500)
+    idx = IVFIndex(E, n_clusters=10, nprobe=2, min_rows=1, train_batch=128)
+    for i in range(0, len(data), 100):
+        idx.observe(data[i:i + 100])
+    assert idx.trained
+    # learned centroids land near the true structure: every point's nearest
+    # centroid should also be near its generating center's best centroid
+    probes = select_probes(idx.centroids, centers, 1)
+    assert len(np.unique(probes)) >= 5  # centers map to distinct clusters
+
+
+def test_candidate_rows_bucketing_and_padding():
+    rng = np.random.default_rng(3)
+    data, _ = _clustered(rng, 400)
+    idx = IVFIndex(E, n_clusters=4, nprobe=1, min_rows=1, train_batch=64)
+    idx.ensure_capacity(512)
+    idx.observe(data)
+    idx.assign_rows(np.arange(400), data, 400)
+    q = data[:3]
+    cand = idx.candidate_rows(q, k=5, nprobe=1)
+    assert cand.shape[1] >= 5 and (cand.shape[1] & (cand.shape[1] - 1)) == 0
+    rows, offs = idx.posting_lists()
+    for qi, c in enumerate(select_probes(idx.centroids, q, 1)[:, 0]):
+        live = cand[qi][cand[qi] >= 0]
+        assert set(live.tolist()) == set(
+            rows[offs[c]:offs[c + 1]].tolist())
+
+
+def test_store_mutations_keep_posting_lists_consistent():
+    rng = np.random.default_rng(4)
+    data, _ = _clustered(rng, 600)
+    st = EmbeddingStore(E, capacity=16)
+    st.attach_ivf(n_clusters=6, nprobe=6, min_rows=1, train_batch=128)
+    st.add_batch(np.arange(600), data, np.zeros(600), np.ones(600))
+    st.ivf_index.check_consistency(len(st), st.rows_of(st.uids()))
+    # deletes (swap-with-last), upgrades, re-adds, duplicate uids in a batch
+    st.delete_batch(np.arange(0, 50))
+    st.ivf_index.check_consistency(len(st), st.rows_of(st.uids()))
+    st.upgrade_batch(np.arange(100, 140),
+                     rng.standard_normal((40, E)).astype(np.float32))
+    st.ivf_index.check_consistency(len(st), st.rows_of(st.uids()))
+    st.add_batch([700, 700, 701], rng.standard_normal((3, E)),
+                 np.zeros(3), np.ones(3))
+    st.ivf_index.check_consistency(len(st), st.rows_of(st.uids()))
+    st.delete_batch(st.uids())
+    st.ivf_index.check_consistency(0, np.zeros(0, np.int64))
+
+
+def test_recluster_assigns_pre_training_rows():
+    rng = np.random.default_rng(5)
+    st = EmbeddingStore(E, capacity=16)
+    # attach BEFORE any rows exist: early inserts precede centroid init
+    st.attach_ivf(n_clusters=8, nprobe=8, min_rows=1, train_batch=64,
+                  init_oversample=8.0)
+    first = rng.standard_normal((10, E)).astype(np.float32)
+    st.add_batch(np.arange(10), first, np.zeros(10), np.ones(10))
+    assert not st.ivf_index.trained  # buffer not full yet
+    data, _ = _clustered(rng, 300)
+    st.add_batch(np.arange(10, 310), data, np.zeros(300), np.ones(300))
+    assert st.ivf_index.trained
+    # the 10 pre-init rows may be unassigned until a re-cluster
+    if st.ivf_index.n_unassigned():
+        assert st.ivf_index.needs_recluster()
+    assert st.ivf_maybe_recluster() or st.ivf_index.n_unassigned() == 0
+    assert st.ivf_index.n_unassigned() == 0
+    st.ivf_index.check_consistency(len(st), st.rows_of(st.uids()))
+
+
+def test_recluster_reseeds_dead_clusters():
+    rng = np.random.default_rng(6)
+    idx = IVFIndex(E, n_clusters=6, nprobe=6, min_rows=1, train_batch=64,
+                   imbalance_factor=2.0)
+    # one tight blob: most centroids end up dead or starved
+    blob = (np.ones((500, E)) +
+            0.01 * rng.standard_normal((500, E))).astype(np.float32)
+    idx.ensure_capacity(512)
+    idx.observe(blob)
+    idx.assign_rows(np.arange(500), blob, 500)
+    sizes0 = idx.sizes()
+    assert (sizes0 == 0).any() or sizes0.max() > 2 * 500 / 6
+    job = idx.begin_recluster(blob)
+    idx.compute_assignments(job)
+    idx.commit_recluster(job, 500)
+    assert idx.n_reseeds > 0
+    idx.check_consistency(500, np.arange(500))
+
+
+def test_commit_skips_rows_mutated_during_compute():
+    rng = np.random.default_rng(7)
+    data, _ = _clustered(rng, 200)
+    st = EmbeddingStore(E, capacity=16)
+    st.attach_ivf(n_clusters=4, nprobe=4, min_rows=1, train_batch=64)
+    st.add_batch(np.arange(200), data, np.zeros(200), np.ones(200))
+    st.ivf_index._drift = 1.0  # force a trigger
+    job = st.ivf_recluster_begin()
+    assert job is not None
+    # a writer lands mid-compute: rows 0..9 get fresh content + assignment
+    fresh = rng.standard_normal((10, E)).astype(np.float32) * 5
+    st.upgrade_batch(np.arange(10), fresh)
+    want = st.ivf_index._assign[:10].copy()
+    IVFIndex.compute_assignments(job)  # stale view of rows 0..9
+    st.ivf_recluster_commit(job)
+    # the stale argmin result must not clobber the fresher hook assignment
+    np.testing.assert_array_equal(st.ivf_index._assign[:10], want)
+    st.ivf_index.check_consistency(len(st), st.rows_of(st.uids()))
+
+
+# -- store integration --------------------------------------------------------
+
+
+def test_full_nprobe_matches_exhaustive_and_auto_cutover(monkeypatch):
+    rng = np.random.default_rng(8)
+    data, centers = _clustered(rng, 800)
+    st = EmbeddingStore(E, capacity=64)
+    st.attach_ivf(n_clusters=8, nprobe=8, min_rows=500, train_batch=128)
+    st.add_batch(np.arange(800), data, np.zeros(800), np.ones(800))
+    q = rng.standard_normal((5, E)).astype(np.float32)
+    nu, ns = st.search_batch(q, 10, impl="numpy")
+    iu, isc = st.search_batch(q, 10, impl="ivf")  # nprobe=8 == C: full cover
+    for a, b in zip(nu, iu):
+        assert set(a.tolist()) == set(b.tolist())
+    # auto on CPU stays on the BLAS path even with a searchable index
+    # (qps_numpy > qps_ivf at every measured size — see _resolve_auto_impl)
+    assert st._resolve_auto_impl() == "numpy"
+    au, _ = st.search_batch(q, 10, impl="auto")
+    assert np.array_equal(au, nu)
+    # accelerator resolution (can't execute device kernels for a fake
+    # backend here, so test the decision directly): cutover at min_rows...
+    import jax
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    assert st._resolve_auto_impl() == "ivf"
+    # ...exhaustive below min_rows...
+    st.ivf_index.min_rows = 100_000
+    assert st._resolve_auto_impl() == "device"
+    st.ivf_index.min_rows = 500
+    # ...and a sharded bank vetoes the cutover (no gathered path yet)
+    st._bank.n_shards = 2
+    assert st._resolve_auto_impl() == "device"
+    st._bank.n_shards = 1
+
+
+def test_pruned_nprobe_matches_numpy_pruned_oracle():
+    rng = np.random.default_rng(9)
+    data, centers = _clustered(rng, 1000)
+    st = EmbeddingStore(E, capacity=64)
+    st.attach_ivf(n_clusters=10, nprobe=3, min_rows=1, train_batch=128)
+    st.add_batch(np.arange(1000), data, np.zeros(1000), np.ones(1000))
+    q = (centers[rng.integers(0, len(centers), 6)] +
+         0.2 * rng.standard_normal((6, E))).astype(np.float32)
+    # per-query strategy == the numpy pruned oracle (same probes, same
+    # candidate blocks)
+    iu, isc = st.search_batch(q, 10, impl="ivf", strategy="gathered")
+    dense, n, uids = st._search_snapshot()
+    ou, osc = pruned_search_numpy(dense, n, uids, st.ivf_index, q, 10)
+    for a, b in zip(iu, ou):
+        assert set(a.tolist()) == set(b.tolist())
+    # batch-union strategy scores a superset of each query's candidates:
+    # recall vs the exact top-k can only improve on the per-query result
+    uu, _ = st.search_batch(q, 10, impl="ivf")
+    nu, _ = st.search_batch(q, 10, impl="numpy")
+    assert recall_at_k(uu, nu) >= recall_at_k(iu, nu)
+    # per-query nprobe override widens the probe set to everything
+    iu2, _ = st.search_batch(q, 10, impl="ivf", nprobe=10)
+    for a, b in zip(iu2, nu):
+        assert set(a.tolist()) == set(b.tolist())
+
+
+def test_untrained_index_falls_back_to_exhaustive():
+    rng = np.random.default_rng(10)
+    st = EmbeddingStore(E, capacity=16)
+    st.attach_ivf(n_clusters=32, nprobe=4, min_rows=1,
+                  init_oversample=100.0)  # buffer threshold unreachably high
+    embs = rng.standard_normal((20, E)).astype(np.float32)
+    st.add_batch(np.arange(20), embs, np.zeros(20), np.ones(20))
+    assert not st.ivf_index.trained
+    q = rng.standard_normal((3, E)).astype(np.float32)
+    iu, _ = st.search_batch(q, 5, impl="ivf")
+    nu, _ = st.search_batch(q, 5, impl="numpy")
+    assert st.ivf_fallbacks == 1
+    for a, b in zip(iu, nu):
+        assert set(a.tolist()) == set(b.tolist())
+
+
+def test_ivf_padding_slots_are_dropped_by_retrieval():
+    from repro.core.retrieval import speculative_retrieve
+    rng = np.random.default_rng(11)
+    data, _ = _clustered(rng, 100, n_centers=4)
+    st = EmbeddingStore(E, capacity=16)
+    st.attach_ivf(n_clusters=4, nprobe=1, min_rows=1, train_batch=64)
+    st.add_batch(np.arange(100), data, np.zeros(100), np.ones(100))
+    q = data[0]
+    # k far above any single cluster's population: pruned result has
+    # sentinel padding (uid -1 / score -1e30)
+    u, s = st.search_batch(q[None], 90, impl="ivf")
+    assert (u == -1).any() and (s[u == -1] <= -1e29).all()
+    res = speculative_retrieve(st, [q], q, k=90, final_k=90, impl="ivf")
+    assert -1 not in res.uids.tolist()
+    assert len(res.uids) > 0
+
+
+def test_ivf_async_refresh_thread_reclusters():
+    rng = np.random.default_rng(12)
+    data, _ = _clustered(rng, 400)
+    st = EmbeddingStore(E, capacity=16)
+    st.attach_ivf(n_clusters=4, nprobe=4, min_rows=1, train_batch=64)
+    ref = st.set_bank_refresh("async", max_lag_rows=0, thread=False)
+    st.add_batch(np.arange(400), data, np.zeros(400), np.ones(400))
+    st.ivf_index._drift = 1.0  # force the trigger
+    # the piggyback point: one epoch + one re-cluster, as the thread does
+    ref.refresh_once()
+    assert st.ivf_maybe_recluster()
+    st.ivf_index.check_consistency(len(st), st.rows_of(st.uids()))
+    q = rng.standard_normal((3, E)).astype(np.float32)
+    iu, _ = st.search_batch(q, 10, impl="ivf", freshness="fresh")
+    nu, _ = st.search_batch(q, 10, impl="numpy")
+    for a, b in zip(iu, nu):
+        assert set(a.tolist()) == set(b.tolist())
+    st.set_bank_refresh("sync")
+
+
+def test_enumerated_ivf_recluster_interleavings():
+    """The acceptance sweep: W/R/S/C interleavings with the posting-list
+    contract asserted after every step and fresh pruned scans compared to
+    the sync oracle (see harness docstring)."""
+    from harness_concurrency import ConcurrencyScenario, enumerate_interleavings
+    scen = ConcurrencyScenario(ivf=True, ivf_clusters=4, freshness="fresh",
+                               n_initial=40)
+    # {W:2, R:3, S:1, C:3}: 9!/(2!3!1!3!) = 5040 schedules; stride to ~180
+    schedules = enumerate_interleavings({"W": 2, "R": 3, "S": 1, "C": 3},
+                                        stride=28)
+    assert len(schedules) == 180
+    total = {"scans": 0, "reclusters": 0}
+    for sched in schedules:
+        stats = scen.run_schedule(sched)
+        total["scans"] += stats["scans"]
+        total["reclusters"] += stats["reclusters"]
+    assert total["scans"] == len(schedules)
+    assert total["reclusters"] > 0  # the C actor actually re-clustered
+
+
+# -- statistical recall bound (tier2) ----------------------------------------
+
+
+@pytest.mark.tier2
+@pytest.mark.parametrize("dist", ["clustered", "uniform"])
+def test_ivf_recall_at_10_meets_bound(dist):
+    """recall@10 >= 0.95 vs the exhaustive oracle at each distribution's
+    documented operating point, and recall is monotone-ish in nprobe.
+    Clustered data (the embedding workload) needs a small probe fraction;
+    uniform data (adversarial for any space partition) needs a large one —
+    that gap is the documented reason the bench uses clustered synthetic
+    data (docs/index.md)."""
+    rng = np.random.default_rng(13)
+    N, C = 6000, 24
+    if dist == "clustered":
+        data, centers = _clustered(rng, N, n_centers=24)
+        q = (centers[rng.integers(0, 24, 64)] +
+             0.12 * rng.standard_normal((64, E))).astype(np.float32)
+        q /= np.linalg.norm(q, axis=1, keepdims=True)
+        passing_nprobe = 6     # 25% of clusters (measured ~0.998)
+    else:
+        data = rng.standard_normal((N, E)).astype(np.float32)
+        data /= np.linalg.norm(data, axis=1, keepdims=True)
+        q = rng.standard_normal((64, E)).astype(np.float32)
+        passing_nprobe = 18    # uniform needs 3/4 of cells (measured ~0.97)
+    st = EmbeddingStore(E, capacity=64)
+    st.attach_ivf(n_clusters=C, nprobe=passing_nprobe, min_rows=1,
+                  train_batch=512)
+    st.add_batch(np.arange(N), data, np.zeros(N), np.ones(N))
+    st.ivf_maybe_recluster()
+    exact = _exact_topk(st._search_snapshot()[0][:N], st.uids(), q, 10)
+    recalls = {}
+    for nprobe in (2, passing_nprobe, C):
+        iu, _ = st.search_batch(q, 10, impl="ivf", nprobe=nprobe)
+        recalls[nprobe] = recall_at_k(iu, exact)
+    assert recalls[passing_nprobe] >= 0.95, recalls
+    assert recalls[C] >= 0.999, recalls          # full probe == exhaustive
+    assert recalls[passing_nprobe] >= recalls[2] - 0.02, recalls

@@ -156,6 +156,37 @@ def test_query_batch_smoke_refines_and_upgrades(service):
     assert all(r.n_refined == 0 and len(r.uids) == 8 for r in res3)
 
 
+def test_query_engine_with_ivf_index_matches_exhaustive(service):
+    """QueryEngine(index='ivf', search_impl='ivf') at full probe fan-out
+    serves the same drain results as the exhaustive engine over the same
+    corpus (the pruned path covers every assigned row when nprobe ==
+    n_clusters) and never falls back. search_impl is explicit because on
+    CPU 'auto' deliberately stays on the numpy path."""
+    params, predictor, data = service
+
+    def build(**kw):
+        eng = _engine(params, predictor)
+        eng.submit_batch(np.arange(32), data.items["vision"][:32])
+        eng.drain()
+        return eng, QueryEngine(params, CFG, RC, store=eng.store,
+                                refine_fn=eng.refine_fn(),
+                                query_modality="text", fw_kw=FW, **kw)
+    _, q_ex = build()
+    eng_ivf, q_ivf = build(index="ivf", index_clusters=4, index_min_rows=1,
+                           nprobe=4, search_impl="ivf")
+    assert eng_ivf.store.ivf_index is not None
+    a = q_ex.query_batch(data.items["text"][:4], k=8)
+    b = q_ivf.query_batch(data.items["text"][:4], k=8)
+    for ra, rb in zip(a, b):
+        assert set(ra.uids.tolist()) == set(rb.uids.tolist())
+        np.testing.assert_allclose(np.sort(ra.scores), np.sort(rb.scores),
+                                   atol=1e-4)
+    assert eng_ivf.store.ivf_fallbacks == 0
+    eng_ivf.store.ivf_index.check_consistency(
+        len(eng_ivf.store),
+        eng_ivf.store.rows_of(eng_ivf.store.uids()))
+
+
 def test_branchynet_policy_runs(service):
     params, predictor, data = service
     eng = _engine(params, predictor, policy="branchynet")
