@@ -33,3 +33,4 @@ bench:
 
 bench-index:
 	$(PY) -m benchmarks.index_scale
+	$(PY) -m benchmarks.check_regression

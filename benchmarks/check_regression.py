@@ -1,17 +1,23 @@
-"""Throughput-regression guard for the store-scaling benchmark.
+"""Throughput-regression guard for the scaling benchmarks.
 
-Diffs a fresh ``benchmarks/artifacts/BENCH_store_scale.json`` against the
-committed baseline (``benchmarks/baselines/BENCH_store_scale.json``) and
-fails when any throughput metric regresses by more than ``THRESHOLD``
-(default 20%). Rows are matched by store size ``n``; metrics present in
-only one side are ignored (so adding a column never trips the guard), and
-a missing baseline is a skip, not a failure (first run / fresh clone).
+Diffs fresh ``benchmarks/artifacts/BENCH_store_scale.json`` and
+``BENCH_index_scale.json`` against the committed baselines
+(``benchmarks/baselines/``) and fails when any throughput metric
+regresses by more than ``THRESHOLD`` (default 20%). store_scale rows are
+matched by store size ``n``; index_scale rows by (distribution, n) with
+sweep entries matched by nprobe. Metrics present in only one side are
+ignored (so adding a column never trips the guard), a missing baseline is
+a skip, not a failure (first run / fresh clone), and a missing
+index_scale ARTIFACT is also a skip — ``make check`` runs only the quick
+store_scale suite; ``make bench-index`` produces the index artifact and
+re-runs this guard.
 
 Absolute items/s and q/s are machine-dependent, so the committed baseline
 only guards *this* machine class; the invariant checks that must hold
-everywhere (steady-state H2D == 0, top-k parity) are asserted inside
-``store_scale.py`` itself. Refresh the baseline after an intentional perf
-change with ``--update-baseline``.
+everywhere (steady-state H2D == 0, top-k parity, sharded-pruned
+fallbacks == 0 + recall floors) are asserted inside the benchmarks
+themselves. Refresh the baselines after an intentional perf change with
+``--update-baseline``.
 
 Run:  PYTHONPATH=src python -m benchmarks.check_regression [--threshold 0.2]
 Wired into ``benchmarks/run.py`` right after the store_scale suite.
@@ -27,6 +33,10 @@ ART = os.path.join(os.path.dirname(__file__), "artifacts",
                    "BENCH_store_scale.json")
 BASE = os.path.join(os.path.dirname(__file__), "baselines",
                     "BENCH_store_scale.json")
+ART_INDEX = os.path.join(os.path.dirname(__file__), "artifacts",
+                         "BENCH_index_scale.json")
+BASE_INDEX = os.path.join(os.path.dirname(__file__), "baselines",
+                          "BENCH_index_scale.json")
 THRESHOLD = 0.20
 
 # higher-is-better metrics guarded against regression
@@ -50,6 +60,7 @@ THROUGHPUT_KEYS = (
 # loosen them — the effective threshold is min(cli, override)
 KEY_THRESHOLDS = {
     "ivf_recall_at10": 0.05,
+    "recall_at10": 0.05,       # index_scale sweep / sharded phase
 }
 
 # higher-is-better metrics from the top-level mixed mutate+scan phase
@@ -97,32 +108,89 @@ def compare(fresh: dict, base: dict, threshold: float = THRESHOLD):
     return regressions, checked
 
 
+# index_scale per-sweep-entry metrics (higher is better). qps/speedup take
+# the CLI threshold; recall is a quality metric with the tight override.
+INDEX_SWEEP_KEYS = ("qps", "speedup_vs_device", "recall_at10")
+
+
+def compare_index(fresh: dict, base: dict, threshold: float = THRESHOLD):
+    """Same contract as ``compare`` for BENCH_index_scale.json: rows match
+    by (dist, n), sweep entries by nprobe; the sharded phase guards its
+    recall floor only (its timing is CPU-oversubscription noise)."""
+    base_rows = {(r["dist"], r["n"]): r for r in base.get("results", [])}
+    regressions, checked = [], []
+
+    def check(n, key, b, f, eff_threshold):
+        if not b or not f:
+            return
+        ratio = f / b
+        entry = (n, key, b, f, ratio)
+        checked.append(entry)
+        if ratio < 1.0 - eff_threshold:
+            regressions.append(entry)
+
+    for row in fresh.get("results", []):
+        ref = base_rows.get((row["dist"], row["n"]))
+        if ref is None:
+            continue
+        ref_sweep = {s["nprobe"]: s for s in ref.get("sweep", [])}
+        for s in row.get("sweep", []):
+            rs = ref_sweep.get(s["nprobe"])
+            if rs is None:
+                continue
+            for key in INDEX_SWEEP_KEYS:
+                check(row["n"], f"{row['dist']}/np{s['nprobe']}/{key}",
+                      rs.get(key), s.get(key),
+                      min(threshold, KEY_THRESHOLDS.get(key, threshold)))
+    fs, bs = fresh.get("sharded") or {}, base.get("sharded") or {}
+    if fs.get("n") == bs.get("n") and fs.get("n_shards") == bs.get("n_shards"):
+        check(fs.get("n", 0), "sharded/recall_at10", bs.get("recall_at10"),
+              fs.get("recall_at10"),
+              min(threshold, KEY_THRESHOLDS["recall_at10"]))
+    return regressions, checked
+
+
 def main(threshold: float = THRESHOLD, update_baseline: bool = False):
     # raise RuntimeError (not SystemExit): benchmarks/run.py isolates suite
     # failures with `except Exception`, and SystemExit would abort the whole
     # orchestrator instead of being recorded like any other suite failure
-    if not os.path.exists(ART):
+    if not os.path.exists(ART) and not os.path.exists(ART_INDEX):
         raise RuntimeError(f"no fresh artifact at {ART}; run "
                            "benchmarks.store_scale first")
     if update_baseline:
         os.makedirs(os.path.dirname(BASE), exist_ok=True)
-        shutil.copyfile(ART, BASE)
-        print(f"[check_regression] baseline updated from {ART}")
+        for art, base_path in ((ART, BASE), (ART_INDEX, BASE_INDEX)):
+            if os.path.exists(art):
+                shutil.copyfile(art, base_path)
+                print(f"[check_regression] baseline updated from {art}")
         return
-    if not os.path.exists(BASE):
-        print(f"[check_regression] no committed baseline at {BASE}; "
-              "skipping (run with --update-baseline to create one)")
-        return
-    with open(ART) as f:
-        fresh = json.load(f)
-    with open(BASE) as f:
-        base = json.load(f)
-    regressions, checked = compare(fresh, base, threshold)
+    regressions, checked = [], []
+    suites = []
+    if os.path.exists(ART):
+        suites.append((ART, BASE, compare))
+    # the index sweep is the slower `make bench-index` suite: its artifact
+    # is optional here (quick `make check` runs never produce one), but
+    # once present it is guarded exactly like store_scale
+    if os.path.exists(ART_INDEX):
+        suites.append((ART_INDEX, BASE_INDEX, compare_index))
+    for art, base_path, fn in suites:
+        if not os.path.exists(base_path):
+            print(f"[check_regression] no committed baseline at "
+                  f"{base_path}; skipping (run with --update-baseline to "
+                  "create one)")
+            continue
+        with open(art) as f:
+            fresh = json.load(f)
+        with open(base_path) as f:
+            base = json.load(f)
+        reg, chk = fn(fresh, base, threshold)
+        regressions += reg
+        checked += chk
     bad = {(n, key) for n, key, *_ in regressions}
     for n, key, b, a, ratio in checked:
         flag = "  REGRESSION" if (n, key) in bad else ""
         print(f"[check_regression] n={n:>9,} {key:<28} "
-              f"{b:>12,.0f} -> {a:>12,.0f}  ({ratio:5.2f}x){flag}")
+              f"{b:>12,.2f} -> {a:>12,.2f}  ({ratio:5.2f}x){flag}")
     if regressions:
         worst = min(regressions, key=lambda e: e[4])
         raise RuntimeError(

@@ -16,14 +16,27 @@ Per (distribution, size, nprobe): pruned q/s, exhaustive-device q/s,
 speedup, recall@10 vs the exact oracle, probed-row fraction. Sanity
 asserts: recall rises with nprobe and hits ~1 at full probe.
 
-Emits ``BENCH_index_scale.json`` (benchmarks/artifacts/).
+The index is attached at a SMALL C with ``auto_grow`` and converges on
+~sqrt(n) through re-cluster epochs — the serving lifecycle, not an
+oracle-tuned attach — and a subprocess phase (8-way CPU shard override)
+records the SHARDED-pruned operating point: the routed scan must serve
+with zero exhaustive fallbacks at recall@10 >= 0.95 on the clustered
+corpus (throughput there is thread-oversubscription noise on a CPU box
+and is recorded unguarded).
+
+Emits ``BENCH_index_scale.json`` (benchmarks/artifacts/), diffed against
+``benchmarks/baselines/`` by ``benchmarks.check_regression``.
 
 Run:  PYTHONPATH=src python -m benchmarks.index_scale [--sizes 20000,50000]
-      (also: make bench-index)
+      (also: make bench-index, which runs the regression guard after)
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import subprocess
+import sys
 import time
 
 import numpy as np
@@ -36,6 +49,7 @@ from repro.index.pruned_scan import recall_at_k
 EMBED_DIM = 256
 N_QUERY = 8
 REPS = 5
+ATTACH_C = 16       # deliberately small: auto_grow must earn ~sqrt(n)
 
 
 def _median_ms(fn, reps: int = REPS) -> float:
@@ -63,16 +77,25 @@ def _corpus(dist: str, n: int, rng) -> tuple:
 
 def bench_one(dist: str, n: int, rng) -> dict:
     embs, queries = _corpus(dist, n, rng)
-    n_clusters = max(16, int(round(np.sqrt(n))))
     store = EmbeddingStore(EMBED_DIM, capacity=64)
-    store.attach_ivf(n_clusters=n_clusters, nprobe=4, min_rows=1)
+    # attach at a small C with auto_grow: the codebook must converge on
+    # ~sqrt(n) through bounded re-cluster epochs (the serving lifecycle),
+    # not be handed the right size up front
+    store.attach_ivf(n_clusters=ATTACH_C, nprobe=4, min_rows=1,
+                     auto_grow=True)
     t0 = time.perf_counter()
     for i in range(0, n, 8192):
         chunk = embs[i:i + 8192]
         store.add_batch(np.arange(i, i + len(chunk)), chunk,
                         np.zeros(len(chunk)), np.ones(len(chunk)))
-    store.ivf_maybe_recluster()
+    for _ in range(32):            # drain growth + pre-init assignment
+        if not store.ivf_maybe_recluster():
+            break
     build_s = time.perf_counter() - t0
+    n_clusters = store.ivf_index.n_clusters
+    tgt = store.ivf_index.target_clusters()
+    assert n_clusters >= tgt / store.ivf_index.grow_trigger, \
+        f"auto-grow stalled at C={n_clusters} (target {tgt}) for n={n:,}"
 
     store.search_batch(queries, 10, impl="device")  # warm
     device_ms = _median_ms(
@@ -105,32 +128,117 @@ def bench_one(dist: str, n: int, rng) -> dict:
               f"recall@10 {recall:.3f}, union {frac:.1%}")
     assert sweep[-1]["recall_at10"] >= 0.999, sweep  # full probe == exact
     return {"dist": dist, "n": n, "n_clusters": n_clusters,
+            "attach_clusters": ATTACH_C, "grows": store.ivf_index.n_grows,
             "build_s": build_s, "device_ms": device_ms,
             "reclusters": store.ivf_index.n_reclusters,
             "train_batches": store.ivf_index.n_train_batches,
             "sweep": sweep}
 
 
-def main(sizes=(20_000, 50_000)):
+def bench_sharded(n: int, n_shards: int = 8, nprobe: int = 16) -> dict:
+    """Sharded-pruned operating point, in a subprocess so the CPU can be
+    split into ``n_shards`` fake devices without disturbing this process's
+    jax runtime. Asserted here: the routed scan serves with ZERO
+    exhaustive fallbacks and recall@10 >= 0.95 vs the exact oracle on the
+    clustered corpus, and matches the single-shard pruned uid sets.
+    Recorded q/s is thread-oversubscription noise on a CPU box — useful
+    as a trend line, not guarded."""
+    code = f"""
+import json, time
+import numpy as np, jax
+from repro.core.store import EmbeddingStore
+from repro.data.synthetic import clustered_sphere
+from repro.index.pruned_scan import recall_at_k
+n, EMBED_DIM, N_QUERY = {n}, {EMBED_DIM}, {N_QUERY}
+rng = np.random.default_rng(0)
+embs, centers = clustered_sphere(rng, n, max(8, int(round(np.sqrt(n))) // 2),
+                                 EMBED_DIM)
+queries, _ = clustered_sphere(rng, N_QUERY, centers=centers)
+
+def build():
+    st = EmbeddingStore(EMBED_DIM, capacity=64)
+    st.attach_ivf(n_clusters={ATTACH_C}, nprobe={nprobe}, min_rows=1,
+                  auto_grow=True)
+    for i in range(0, n, 8192):
+        chunk = embs[i:i + 8192]
+        st.add_batch(np.arange(i, i + len(chunk)), chunk,
+                     np.zeros(len(chunk)), np.ones(len(chunk)))
+    for _ in range(32):
+        if not st.ivf_maybe_recluster():
+            break
+    return st
+
+st = build()
+st.attach_device_bank(jax.devices())
+assert st.device_bank.n_shards == {n_shards}, st.device_bank.n_shards
+single = build()
+single.attach_device_bank(jax.devices()[:1])
+su = st.search_batch(queries, 10, impl="ivf")[0]          # warm
+t = []
+for _ in range({REPS}):
+    t0 = time.perf_counter()
+    su = st.search_batch(queries, 10, impl="ivf")[0]
+    t.append(time.perf_counter() - t0)
+du = single.search_batch(queries, 10, impl="ivf")[0]
+nu = single.search_batch(queries, 10, impl="numpy")[0]
+for a, b in zip(su, du):
+    assert set(a.tolist()) == set(b.tolist()), "sharded != single-shard"
+out = {{"n": n, "n_shards": st.device_bank.n_shards,
+        "n_clusters": st.ivf_index.n_clusters, "nprobe": {nprobe},
+        "ivf_fallbacks": st.ivf_fallbacks,
+        "recall_at10": recall_at_k(su, nu),
+        "sharded_ivf_ms": float(np.median(t) * 1e3)}}
+print("RESULT " + json.dumps(out))
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count={n_shards}")
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, timeout=1800, env=env)
+    assert proc.returncode == 0, f"sharded phase failed:\n{proc.stderr}"
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")]
+    out = json.loads(line[-1][len("RESULT "):])
+    # THE sharded acceptance point: routed (never fallback) + recall floor
+    assert out["ivf_fallbacks"] == 0, out
+    assert out["recall_at10"] >= 0.95, out
+    print(f"[index_scale] sharded({out['n_shards']}x) n={n:,}: "
+          f"recall@10 {out['recall_at10']:.3f}, fallbacks 0, "
+          f"{out['sharded_ivf_ms']:.1f} ms/batch (oversubscribed CPU — "
+          f"trend only)")
+    return out
+
+
+def main(sizes=(20_000, 50_000), with_sharded: bool = True):
     rng = np.random.default_rng(0)
     results = [bench_one(dist, n, rng)
                for dist in ("clustered", "uniform") for n in sizes]
+    # sharded-pruned operating point (8-way CPU override, subprocess) at
+    # the smallest size: the asserted bits are routing (fallbacks == 0)
+    # and recall, which don't depend on corpus scale
+    sharded = bench_sharded(min(sizes)) if with_sharded else None
     rows = []
     for r in results:
         best = max((s for s in r["sweep"] if s["recall_at10"] >= 0.95),
                    key=lambda s: s["qps"], default=None)
-        rows.append([r["dist"], f"{r['n']:,}", f"{r['n_clusters']}",
+        rows.append([r["dist"], f"{r['n']:,}",
+                     f"{r['attach_clusters']}->{r['n_clusters']}",
                      "-" if best is None else f"{best['nprobe']}",
                      "-" if best is None else f"{best['speedup_vs_device']:.1f}x",
                      "-" if best is None else f"{best['recall_at10']:.3f}"])
     C.print_table("IVF recall/throughput (fastest nprobe with recall>=0.95)",
                   rows, ["dist", "items", "C", "nprobe", "speedup", "recall"])
-    path = C.save_json("BENCH_index_scale.json", {"results": results})
+    path = C.save_json("BENCH_index_scale.json",
+                       {"results": results, "sharded": sharded})
     print(f"wrote {path}")
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--sizes", default="20000,50000")
+    ap.add_argument("--no-sharded", dest="sharded", action="store_false",
+                    help="skip the 8-way sharded-pruned subprocess phase")
     args = ap.parse_args()
-    main(tuple(int(s) for s in args.sizes.split(",")))
+    main(tuple(int(s) for s in args.sizes.split(",")),
+         with_sharded=args.sharded)

@@ -192,6 +192,8 @@ def _bench_ivf(n: int, rng: np.random.Generator) -> dict:
     from repro.data.synthetic import clustered_sphere
     C_clusters = max(16, int(round(np.sqrt(n))))
     nprobe = max(4, C_clusters // 36)
+    if n <= C_clusters:  # tiny edge probe (--sizes 5): the index can never
+        return {}        # train at n < C, so there is nothing to prune
     embs, centers = clustered_sphere(rng, n, max(8, C_clusters // 2),
                                      EMBED_DIM)
     queries, _ = clustered_sphere(rng, N_QUERY, centers=centers)
@@ -242,6 +244,29 @@ def _bench_ivf(n: int, rng: np.random.Generator) -> dict:
            "ivf_scanned_frac": scanned_frac,
            "ivf_fallbacks": store.ivf_fallbacks,
            "ivf_reclusters": store.ivf_index.n_reclusters}
+
+    # sharded routing (needs >1 visible device, e.g. run under
+    # XLA_FLAGS=--xla_force_host_platform_device_count=8): re-shard the
+    # same store's bank — the pruned scan must stay ROUTED (zero
+    # exhaustive fallbacks) and agree with the single-shard uid sets
+    import jax
+    devs = jax.devices()
+    if len(devs) > 1:
+        f0 = store.ivf_fallbacks
+        store.attach_device_bank(devs)
+        store.search_batch(queries, 10, impl="ivf")           # warm
+        t0 = time.perf_counter()
+        su = store.search_batch(queries, 10, impl="ivf")[0]
+        out["ivf_sharded_ms"] = (time.perf_counter() - t0) * 1e3
+        out["ivf_sharded_n_shards"] = store.device_bank.n_shards
+        assert store.ivf_fallbacks == f0, \
+            "sharded pruned scan fell back to the exhaustive path"
+        for a, b in zip(su, iu):
+            assert set(a.tolist()) == set(b.tolist()), \
+                "sharded and single-shard pruned scans disagree"
+    else:
+        out["ivf_sharded_ms"] = None
+        out["ivf_sharded_n_shards"] = 1
     print(f"[store_scale] n={n:,} IVF: {out['qps_ivf']:,.0f} q/s = "
           f"{speedup:.1f}x exhaustive device, recall@10 {recall:.3f} "
           f"(C={C_clusters}, nprobe={nprobe}, "

@@ -54,13 +54,21 @@ from repro.core.device_bank import BankSnapshot
 @dataclasses.dataclass
 class RefreshEpoch:
     """One epoch's immutable handoff: the dirty-row payload copied under the
-    store lock at begin, plus the row count / uid snapshot of that instant."""
+    store lock at begin, plus the row count / uid snapshot of that instant.
+    ``bank`` pins the DeviceBank the epoch was begun against — apply/flip
+    must target IT, not ``store._bank``: a concurrent re-attach swaps the
+    store's bank for a fresh (empty) object, and scattering this epoch's
+    partial dirty slice into the replacement would publish a bank whose
+    un-scattered rows are zeros (the re-attach re-marks every row dirty,
+    so the NEXT epoch uploads the replacement in full; this one's flip
+    lands on the retired bank, where it is harmless)."""
     rows: np.ndarray                       # host row indices to scatter
     vals: np.ndarray                       # packed payload copy, (m, E//2)
     scs: np.ndarray                        # scales copy, (m, 1)
     n: int                                 # store row count at begin
     uids: np.ndarray                       # (n,) uid snapshot at begin
     host_cap: int                          # host slab capacity at begin
+    bank: object = None                    # DeviceBank pinned at begin
     snapshot: Optional[BankSnapshot] = None  # shadow, filled by apply()
 
 
@@ -109,7 +117,7 @@ class RefreshScheduler:
                 rows=rows, vals=st._packed[rows].copy(),
                 scs=st._scales[rows].copy(), n=st._n,
                 uids=st._meta["uid"][:st._n].copy(),
-                host_cap=st._packed.shape[0])
+                host_cap=st._packed.shape[0], bank=bank)
 
     def apply(self, epoch: RefreshEpoch) -> BankSnapshot:
         """Phase 2, no locks: build the shadow snapshot (grow + scatter).
@@ -118,8 +126,10 @@ class RefreshScheduler:
         forces a retrace + compile worth 10-20x a steady scan, which the
         sync path pays inline on the first post-growth query; here it
         happens off the query path while scans keep hitting the old
-        generation's cached executable."""
-        bank = self.store._bank
+        generation's cached executable. Targets the epoch's OWN bank (see
+        ``RefreshEpoch.bank``), which a concurrent re-attach may already
+        have retired."""
+        bank = epoch.bank
         old_cap = bank.capacity
         epoch.snapshot = bank.apply_rows(
             epoch.host_cap, epoch.rows, epoch.vals, epoch.scs,
@@ -129,9 +139,10 @@ class RefreshScheduler:
         return epoch.snapshot
 
     def flip(self, epoch: RefreshEpoch) -> BankSnapshot:
-        """Phase 3: atomically publish the shadow."""
+        """Phase 3: atomically publish the shadow (onto the epoch's own
+        bank — a no-op for serving if a re-attach retired it mid-epoch)."""
         self.n_epochs += 1
-        return self.store._bank.publish(epoch.snapshot)
+        return epoch.bank.publish(epoch.snapshot)
 
     def refresh_once(self) -> bool:
         """Run one full epoch (begin -> apply -> flip); False if clean.
@@ -146,7 +157,11 @@ class RefreshScheduler:
             if epoch is None:
                 return False
             try:
-                with self.store._bank.refresh_lock:
+                # the EPOCH's bank's refresh lock: serializes against an
+                # in-lock bank.sync from the sync query path targeting the
+                # same bank (a re-attached replacement has its own lock —
+                # and its own full-dirty warm-up epoch coming)
+                with epoch.bank.refresh_lock:
                     self.apply(epoch)
                     self.flip(epoch)
             except BaseException:
@@ -239,8 +254,12 @@ class RefreshScheduler:
                 # IVF re-clustering piggybacks on refresh epochs: the
                 # O(n·C) re-assignment runs HERE (its compute phase holds
                 # no locks at all), so serving never blocks on it — the
-                # sync path, by contrast, pays it inline on a query
-                self.store.ivf_maybe_recluster()
+                # sync path, by contrast, pays it inline on a query.
+                # Loop while jobs fire: codebook auto-growth converges on
+                # ~sqrt(n) over SEVERAL bounded (<= 2x) steps, and each
+                # should land now rather than one idle period apart
+                while self.store.ivf_maybe_recluster() and not self._stop:
+                    pass
             except Exception as e:  # keep the daemon alive; dirt was requeued
                 warnings.warn(f"bank refresh epoch failed: {e!r}",
                               RuntimeWarning)

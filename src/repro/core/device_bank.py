@@ -62,7 +62,11 @@ Sharded search (``len(devices) > 1``): rows are partitioned contiguously
 across a 1-D ``bank`` mesh; each shard runs the fused scan over its slice
 and the per-shard (Q, k) winners are merged with one small all-gather
 (``distributed.collectives.topk_allgather_merge``) — wire cost independent
-of bank size.
+of bank size. The IVF pruned entries (``search_rows``/``search_gathered``)
+shard-route the same way: the candidate set is partitioned by row
+ownership (``repro.index.pruned_scan.partition_rows_by_shard``) or masked
+per shard, each shard scans only its local candidates with per-shard
+``n_valid`` masking, and the partials merge through the same collective.
 """
 from __future__ import annotations
 
@@ -82,8 +86,9 @@ from repro.kernels.retrieval_topk.ops import (default_int4_impl,
                                               retrieval_topk_int4,
                                               retrieval_topk_int4_gathered,
                                               retrieval_topk_int4_rows)
-from repro.kernels.retrieval_topk.ref import (retrieval_topk_int4_blocked,
-                                              retrieval_topk_reference)
+from repro.kernels.retrieval_topk.ref import (
+    retrieval_topk_int4_blocked, retrieval_topk_int4_gathered_blocked,
+    retrieval_topk_reference)
 
 
 class BankSnapshot(NamedTuple):
@@ -440,6 +445,106 @@ class DeviceBank:
                 q, packed, scales, jnp.asarray(n, jnp.int32))
         return np.asarray(i, np.int64), np.asarray(s, np.float32)
 
+    def _sharded_rows_fn(self, k: int, k_loc: int, impl: str, cap: int,
+                         m_width: int):
+        """Jitted shard_map pruned scan (batch-union strategy) for one
+        (k, candidate-width, capacity): each shard gathers ITS slice of the
+        routed candidate set (``m_width`` shard-local rows, live entries
+        first), runs the same fused int4 dequant-and-scan as the exhaustive
+        path with per-shard ``n_valid`` = its live candidate count, and the
+        per-shard (Q, k_loc) winners merge through one small all-gather.
+        Per-shard work scales with its candidate share, not the bank size —
+        the same >= 3x pruning shape the single-shard path asserts."""
+        key = ("rows", k, k_loc, cap, m_width, impl)
+        fn = self._search_fns.get(key)
+        if fn is not None:
+            return fn
+        rps = cap // self.n_shards
+        block_n = self.block_n
+        interpret = jax.default_backend() != "tpu"
+
+        def local(q, p, sc, rows, m):
+            sid = jax.lax.axis_index("bank")
+            rloc = rows[0]                 # (M,) shard-local candidate rows
+            mloc = m[0]                    # () live candidates this shard
+            gp = jnp.take(p, rloc, axis=0)        # (M, E//2) int4 bytes
+            gs = jnp.take(sc, rloc, axis=0)       # (M, 1)
+            if impl == "pallas":
+                from repro.kernels.retrieval_topk.kernel import (
+                    retrieval_topk_int4_pallas)
+                s, i = retrieval_topk_int4_pallas(
+                    q, gp, gs, k_loc, normalize=False, n_valid=mloc,
+                    interpret=interpret)
+            else:
+                s, i = retrieval_topk_int4_blocked(
+                    q, gp, gs, k_loc, normalize=False, block_n=block_n,
+                    n_valid=mloc)
+            gids = jnp.take(rloc, i) + (sid * rps).astype(jnp.int32)
+            # a shard short of k_loc live candidates pads with sentinel
+            # scores; those slots must not surface a real row id
+            gids = jnp.where(s > -5e29, gids, -1)
+            return topk_allgather_merge(s, gids, k, "bank")
+
+        mesh = self.mesh
+
+        def search(q, p, sc, rows, m):
+            return shard_map(local, mesh=mesh,
+                             in_specs=(P(), P("bank"), P("bank"), P("bank"),
+                                       P("bank")),
+                             out_specs=(P(), P()), check_rep=False)(
+                                 q, p, sc, rows, m)
+
+        fn = jax.jit(search)
+        self._search_fns[key] = fn
+        return fn
+
+    def _sharded_gathered_fn(self, k: int, impl: str, cap: int, width: int):
+        """Jitted shard_map pruned scan (per-query strategy): the (Q, L)
+        global candidate matrix is replicated; each shard translates it to
+        shard-local row ids, masks candidates it does not own (or past its
+        local fill) to -1, scans its gathered blocks with the per-query
+        fused kernel, and the per-shard winners merge via all-gather. Every
+        shard walks the full (Q, L) id matrix but gathers/dequantizes only
+        its own rows' payload."""
+        key = ("gathered", k, cap, width, impl)
+        fn = self._search_fns.get(key)
+        if fn is not None:
+            return fn
+        rps = cap // self.n_shards
+        interpret = jax.default_backend() != "tpu"
+
+        def local(q, p, sc, ids, n):
+            sid = jax.lax.axis_index("bank")
+            base = (sid * rps).astype(jnp.int32)
+            n_loc = jnp.clip(n - base, 0, rps).astype(jnp.int32)
+            lid = ids - base
+            lid = jnp.where((ids >= 0) & (lid >= 0) & (lid < rps), lid, -1)
+            if impl == "pallas":
+                from repro.kernels.retrieval_topk.kernel import (
+                    retrieval_topk_int4_gathered_pallas)
+                safe = jnp.clip(lid, 0, rps - 1)
+                gp = jnp.take(p, safe, axis=0)    # (Q, L, E//2) int4 bytes
+                gs = jnp.take(sc, safe, axis=0)   # (Q, L, 1)
+                s, i = retrieval_topk_int4_gathered_pallas(
+                    q, gp, gs, lid, k, n_valid=n_loc, interpret=interpret)
+            else:
+                s, i = retrieval_topk_int4_gathered_blocked(
+                    q, p, sc, lid, k, normalize=False, n_valid=n_loc)
+            gids = jnp.where(s > -5e29, i + base, -1)
+            return topk_allgather_merge(s, gids, k, "bank")
+
+        mesh = self.mesh
+
+        def search(q, p, sc, ids, n):
+            return shard_map(local, mesh=mesh,
+                             in_specs=(P(), P("bank"), P("bank"), P(), P()),
+                             out_specs=(P(), P()), check_rep=False)(
+                                 q, p, sc, ids, n)
+
+        fn = jax.jit(search)
+        self._search_fns[key] = fn
+        return fn
+
     def search_gathered(self, queries: np.ndarray, row_ids: np.ndarray,
                         k: int, state: Optional[BankSnapshot] = None, **kw
                         ) -> Tuple[np.ndarray, np.ndarray]:
@@ -451,19 +556,35 @@ class DeviceBank:
         bank still never materializes. Ids past the snapshot's fill level
         are masked (posting lists may run ahead of a stale generation).
         Returns ((Q, k) GLOBAL row ids, (Q, k) scores); slots with no live
-        candidate hold id -1 / score -1e30. Single-shard int4 banks only
-        (the store falls back to the exhaustive scan otherwise)."""
+        candidate hold id -1 / score -1e30. On a row-sharded bank each
+        shard masks the candidates it does not own, scans its local
+        gathered blocks, and the per-shard winners merge via
+        ``topk_allgather_merge`` (kernel kwargs are rejected there, like
+        ``search``). Requires an int4 bank."""
         if state is None:
             state = self._published
         assert state is not None, "sync() before search_gathered()"
-        if self.n_shards > 1 or not self.store_int4:
-            raise NotImplementedError(
-                "gathered pruned search needs a single-shard int4 bank")
+        if not self.store_int4:
+            raise NotImplementedError("pruned search needs an int4 bank")
         k = min(k, state.n)
         q = jnp.asarray(np.asarray(queries, np.float32))
-        s, i = retrieval_topk_int4_gathered(
-            q, state.packed, state.scales, row_ids, k, normalize=False,
-            impl=self._resolve_impl(), n_valid=state.n, **kw)
+        if self.n_shards == 1:
+            s, i = retrieval_topk_int4_gathered(
+                q, state.packed, state.scales, row_ids, k, normalize=False,
+                impl=self._resolve_impl(), n_valid=state.n, **kw)
+            return np.asarray(i, np.int64), np.asarray(s, np.float32)
+        if kw:
+            raise ValueError("sharded DeviceBank.search_gathered takes no "
+                             f"kernel kwargs (got {sorted(kw)})")
+        row_ids = np.asarray(row_ids, np.int32)
+        if row_ids.shape[1] < k:  # top-k needs >= k columns (-1 = masked)
+            row_ids = np.pad(row_ids, ((0, 0), (0, k - row_ids.shape[1])),
+                             constant_values=-1)
+        fn = self._sharded_gathered_fn(k, self._resolve_impl(),
+                                       state.packed.shape[0],
+                                       row_ids.shape[1])
+        s, i = fn(q, state.packed, state.scales, jnp.asarray(row_ids),
+                  jnp.asarray(state.n, jnp.int32))
         return np.asarray(i, np.int64), np.asarray(s, np.float32)
 
     def search_rows(self, queries: np.ndarray, rows: np.ndarray, k: int,
@@ -474,18 +595,38 @@ class DeviceBank:
         SAME fused dequant-and-scan the exhaustive path runs, over
         ``len(rows)`` instead of ``n`` rows. The caller pre-filters
         ``rows`` to ``< state.n`` (the union comes from current posting
-        lists, the scan from one published snapshot). Returns
-        ((Q, k) GLOBAL row ids, (Q, k) scores). Requires k <= len(rows)
-        and a single-shard int4 bank."""
+        lists, the scan from one published snapshot). On a row-sharded
+        bank the union is routed by shard ownership
+        (``pruned_scan.partition_rows_by_shard``): each shard scans only
+        its shard-local candidate slice and the partial top-k merge via
+        ``topk_allgather_merge`` (kernel kwargs are rejected there, like
+        ``search``). Returns ((Q, k) GLOBAL row ids, (Q, k) scores); a
+        slot with no live candidate (only reachable when the total live
+        candidate count < k) holds id -1 / score -1e30. Requires
+        k <= len(rows) and an int4 bank."""
         if state is None:
             state = self._published
         assert state is not None, "sync() before search_rows()"
-        if self.n_shards > 1 or not self.store_int4:
-            raise NotImplementedError(
-                "gathered pruned search needs a single-shard int4 bank")
+        if not self.store_int4:
+            raise NotImplementedError("pruned search needs an int4 bank")
         q = jnp.asarray(np.asarray(queries, np.float32))
-        s, i = retrieval_topk_int4_rows(
-            q, state.packed, state.scales, rows, k, normalize=False,
-            impl=self._resolve_impl(), **kw)
-        rows = np.asarray(rows, np.int64)
-        return rows[np.asarray(i, np.int64)], np.asarray(s, np.float32)
+        if self.n_shards == 1:
+            s, i = retrieval_topk_int4_rows(
+                q, state.packed, state.scales, rows, k, normalize=False,
+                impl=self._resolve_impl(), **kw)
+            rows = np.asarray(rows, np.int64)
+            return rows[np.asarray(i, np.int64)], np.asarray(s, np.float32)
+        if kw:
+            raise ValueError("sharded DeviceBank.search_rows takes no "
+                             f"kernel kwargs (got {sorted(kw)}); set "
+                             "block_n at attach_device_bank time")
+        from repro.index.pruned_scan import partition_rows_by_shard
+        cap = state.packed.shape[0]
+        local, counts = partition_rows_by_shard(rows, cap // self.n_shards,
+                                                self.n_shards)
+        k_loc = min(k, local.shape[1])
+        fn = self._sharded_rows_fn(k, k_loc, self._resolve_impl(), cap,
+                                   local.shape[1])
+        s, gids = fn(q, state.packed, state.scales, jnp.asarray(local),
+                     jnp.asarray(counts))
+        return np.asarray(gids, np.int64), np.asarray(s, np.float32)

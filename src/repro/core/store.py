@@ -595,12 +595,23 @@ class EmbeddingStore:
             with self._lock:
                 if not idx.trained:
                     # late init: the index was attached before enough rows
-                    # existed and insert traffic never filled the buffer
+                    # existed and insert traffic never filled the buffer.
+                    # Seed + train on a BOUNDED subsample only — begin
+                    # runs under the store lock and a full-corpus
+                    # init_from would stall every writer and query for
+                    # O(n*C*E); the unassigned-rows trigger then fires
+                    # THIS job, whose unlocked compute phase assigns and
+                    # Lloyd-refines over the full corpus anyway.
                     if self._n < idx.n_clusters:
                         idx.recluster_lock.release()
                         return None
                     self._refresh_dense_locked()
-                    idx.init_from(self._dense[:self._n])
+                    m = min(self._n,
+                            max(idx.n_clusters + 1,
+                                int(idx.n_clusters * idx.init_oversample)))
+                    sel = (np.arange(self._n) if m == self._n else
+                           idx._rng.choice(self._n, m, replace=False))
+                    idx.init_from(self._dense[sel])
                 if not idx.needs_recluster():
                     idx.recluster_lock.release()
                     return None
@@ -733,8 +744,7 @@ class EmbeddingStore:
                 # async: no store lock on the query path at all — the
                 # scheduler hands back a published generation (refreshing
                 # first only when the policy demands it)
-                snap = ref.snapshot_for_query(freshness)
-                bank = self._bank
+                bank, snap, _ = self._async_bank_coherent(ref, freshness)
             else:
                 with self._lock:
                     bank, snap = self._sync_bank_locked()
@@ -781,14 +791,41 @@ class EmbeddingStore:
         cheap), so auto stays on numpy; ``impl='ivf'`` remains available
         explicitly. Accelerators: the IVF pruned path once the store holds
         the index's ``min_rows`` (>= 3x the exhaustive device scan there,
-        asserted in the bench); sharded banks have no gathered path yet —
-        don't cut over just to fall back."""
+        asserted in the bench) — sharded banks included, now that the
+        pruned scan shard-routes the candidate set instead of falling back
+        to the exhaustive sharded scan."""
         if jax.default_backend() == "cpu":
             return "numpy"
-        if (self._ivf is not None and self._ivf.searchable(self._n)
-                and (self._bank is None or self._bank.n_shards == 1)):
+        if self._ivf is not None and self._ivf.searchable(self._n):
             return "ivf"
         return "device"
+
+    def _async_bank_coherent(self, ref, freshness: Optional[str],
+                             cand_fn=None):
+        """Resolve a coherent (bank, snapshot[, candidates]) triple on the
+        async query path WITHOUT holding the store lock across the
+        (possibly blocking) refresh: the snapshot must belong to the SAME
+        bank object the scan will run on — a concurrent
+        ``attach_device_bank`` swaps ``self._bank`` for a fresh object, and
+        pairing the old bank's snapshot with the new bank (or one bank's
+        snapshot with another's posting-list candidates) would scan
+        mismatched row spaces. Banks are never reused, so observing
+        ``self._bank is bank`` under the lock AFTER taking the snapshot
+        proves no swap happened in between; ``cand_fn`` (candidate
+        building) runs inside that same lock hold. A re-attach storm
+        (bounded retries exhausted) falls back to the fully-coherent
+        in-lock sync refresh — the bank's refresh_lock serializes it
+        against any in-flight scheduler epoch."""
+        for _ in range(8):
+            bank = self._bank
+            snap = ref.snapshot_for_query(freshness)
+            with self._lock:
+                if bank is not None and self._bank is bank:
+                    return bank, snap, (None if cand_fn is None
+                                        else cand_fn())
+        with self._lock:
+            bank, snap = self._sync_bank_locked()
+            return bank, snap, (None if cand_fn is None else cand_fn())
 
     def _search_ivf(self, queries: np.ndarray, k: int, *,
                     freshness: Optional[str], nprobe: Optional[int],
@@ -798,11 +835,13 @@ class EmbeddingStore:
         Candidate rows come from the CURRENT posting lists while the scan
         runs against ONE published snapshot: in sync mode the two are taken
         under the same lock hold, so they agree exactly; under the async
-        policy the postings may run ahead of a stale generation — candidate
-        ids past ``snap.n`` are masked/filtered, rows deleted since the
-        flip simply drop out, both within the configured staleness
-        semantics (re-scoring in retrieval rounds 2/3 is against live rows
-        either way).
+        policy the bank/snapshot/candidate pairing is resolved by
+        ``_async_bank_coherent`` (candidates build in the same lock hold
+        that validates the pairing) and the postings may run ahead of a
+        stale generation — candidate ids past ``snap.n`` are
+        masked/filtered, rows deleted since the flip simply drop out, both
+        within the configured staleness semantics (re-scoring in retrieval
+        rounds 2/3 is against live rows either way).
 
         ``strategy='union'`` (default) gathers the union of every query's
         probed clusters ONCE and feeds the batch through the standard
@@ -810,7 +849,11 @@ class EmbeddingStore:
         strictly a recall bonus, and the shared matmul amortizes like the
         exhaustive path. ``'gathered'`` scans each query's own (Q, L)
         candidate block via the per-query gathered kernel (the
-        TPU-targeted variant; no cross-query candidates)."""
+        TPU-targeted variant; no cross-query candidates). On a row-sharded
+        bank both strategies shard-route: the union partitions by shard
+        ownership (each shard scans only its local candidate slice), the
+        gathered path masks per shard, and the per-shard partial top-k
+        merge through ``topk_allgather_merge``."""
         idx_obj = self._ivf
         if idx_obj is None:
             raise ValueError("impl='ivf' requires attach_ivf() first")
@@ -825,15 +868,12 @@ class EmbeddingStore:
             self.ivf_maybe_recluster()
             with self._lock:
                 bank, snap = self._sync_bank_locked()
-                cand = (None if bank.n_shards > 1 else
-                        self._ivf_candidates_locked(queries, k, nprobe,
-                                                    strategy))
+                cand = self._ivf_candidates_locked(queries, k, nprobe,
+                                                   strategy)
         else:
-            snap = ref.snapshot_for_query(freshness)
-            bank = self._bank
-            with self._lock:
-                cand = (None if bank.n_shards > 1 else
-                        self._ivf_candidates_locked(queries, k, nprobe,
+            bank, snap, cand = self._async_bank_coherent(
+                ref, freshness,
+                lambda: self._ivf_candidates_locked(queries, k, nprobe,
                                                     strategy))
         if snap.n == 0:
             return (np.zeros((nq, 0), np.int64),
@@ -843,10 +883,9 @@ class EmbeddingStore:
             cand = cand[cand < snap.n]  # postings ahead of a stale snap
             if cand.size == 0:
                 cand = None
-        if cand is None or bank.n_shards > 1:
-            # untrained index (too few rows yet), empty probe set, or
-            # sharded bank (no gathered path across shards yet): serve
-            # exhaustively — correct, just not pruned
+        if cand is None:
+            # untrained index (too few rows yet) or empty probe set:
+            # serve exhaustively — correct, just not pruned
             self.ivf_fallbacks += 1
             ridx, top_s = bank.search(queries, k, state=snap, **kw)
             return snap.uids[ridx], top_s
@@ -854,7 +893,11 @@ class EmbeddingStore:
             k2 = min(k, int(cand.size))
             gids, top_s = bank.search_rows(queries, cand, k2, state=snap,
                                            **kw)
-            uids = snap.uids[gids]
+            # a sharded merge can surface sentinel slots (a shard short of
+            # candidates); map them to uid -1 like the gathered path
+            live = top_s > -5e29
+            uids = np.where(live, snap.uids[np.clip(gids, 0, snap.n - 1)],
+                            -1)
             if k2 < k:  # union smaller than k: pad with the sentinel
                 uids = np.pad(uids, ((0, 0), (0, k - k2)),
                               constant_values=-1)

@@ -27,11 +27,16 @@ Design
   (under the store lock, O(C): reseed dead/overfull centroids from live
   rows, snapshot centroids, arm a dirty-during bitmap),
   ``compute_assignments`` (no locks: blocked argmin over the store's
-  copy-on-write dense view), ``commit_recluster`` (under the lock: apply
-  the new assignment to every row NOT mutated during the compute window —
-  mutated rows already got a fresher assignment from their own hook).
-  Triggers: any unassigned rows (inserted before training converged),
-  posting-list imbalance, or accumulated centroid drift.
+  copy-on-write dense view, plus one Lloyd mean-update per cluster),
+  ``commit_recluster`` (under the lock: install the refined centroids and
+  apply the new assignment to every row NOT mutated during the compute
+  window — mutated rows already got a fresher assignment from their own
+  hook). Triggers: any unassigned rows (inserted before training
+  converged), posting-list imbalance, accumulated centroid drift, or a
+  pending ``auto_grow`` codebook-growth step (C tracks ~sqrt(n) in
+  bounded <= 2x steps seeded from the heaviest clusters — the probed
+  fraction then SHRINKS as the store scales instead of being pinned by
+  the attach-time C).
 
 Consistency contract (property-tested, and enumerated alongside the bank
 harness): after any interleaving of add/upgrade/delete/re-cluster phases,
@@ -78,10 +83,12 @@ class ReclusterJob:
     ``owner`` pins the index the job belongs to — commit/abort must target
     it even if the store's attached index was swapped mid-job."""
     n: int
-    centroids: np.ndarray      # (C, E) copy at begin (post-reseed)
+    centroids: np.ndarray      # (C, E) copy at begin (post-reseed/grow)
     dense: np.ndarray          # store dense view (read rows < n only)
     owner: "IVFIndex" = None   # set by begin_recluster
-    new_assign: Optional[np.ndarray] = None  # filled by compute
+    new_assign: Optional[np.ndarray] = None     # filled by compute
+    new_centroids: Optional[np.ndarray] = None  # Lloyd means, ditto
+    new_counts: Optional[np.ndarray] = None     # cluster mass at compute
 
 
 class IVFIndex:
@@ -97,7 +104,9 @@ class IVFIndex:
                  nprobe: int = 8, min_rows: int = 32_768, seed: int = 0,
                  train_batch: int = 1024, init_oversample: float = 4.0,
                  imbalance_factor: float = 4.0,
-                 drift_threshold: float = 0.25):
+                 drift_threshold: float = 0.25,
+                 auto_grow: bool = False, max_clusters: int = 4096,
+                 grow_trigger: float = 1.5):
         assert n_clusters >= 2, n_clusters
         self.embed_dim = embed_dim
         self.n_clusters = n_clusters
@@ -107,6 +116,16 @@ class IVFIndex:
         self.init_oversample = init_oversample
         self.imbalance_factor = imbalance_factor
         self.drift_threshold = drift_threshold
+        # auto-grow: keep C tracking ~sqrt(n) instead of pinning it at the
+        # attach-time choice — a re-cluster epoch grows the codebook (at
+        # most 2x per epoch, seeded from the heaviest clusters' rows) when
+        # sqrt(n) has run ``grow_trigger`` ahead of C, so the probed
+        # fraction keeps SHRINKING as the store scales (scanned rows ~
+        # nprobe*n/C ~ nprobe*sqrt(n), sub-linear) instead of growing
+        # linearly with n at fixed C
+        self.auto_grow = auto_grow
+        self.max_clusters = max_clusters
+        self.grow_trigger = grow_trigger
         self._rng = np.random.default_rng(seed)
         self.centroids: Optional[np.ndarray] = None   # (C, E) fp32
         self._counts = np.ones(n_clusters, np.int64)  # minibatch LR state
@@ -118,6 +137,13 @@ class IVFIndex:
         # lazy CSR posting lists (rebuilt from _assign on demand)
         self._csr: Optional[Tuple[np.ndarray, np.ndarray]] = None
         self._csr_stale = True
+        # lazily-cached aggregate assignment stats (unassigned count, max
+        # cluster size): needs_recluster() runs on EVERY sync-mode ivf
+        # query, and recomputing these is two O(n) passes under the store
+        # lock — a linear per-query term on the path whose whole point is
+        # sub-linear work. Invalidated exactly where the CSR is.
+        self._agg_stale = True
+        self._agg = (0, 0)
         # re-cluster machinery
         self._recluster_active = False
         self._dirty_during = np.zeros(64, np.bool_)
@@ -132,6 +158,7 @@ class IVFIndex:
         self.n_train_batches = 0
         self.n_reclusters = 0
         self.n_reseeds = 0
+        self.n_grows = 0
 
     # -- state ---------------------------------------------------------------
 
@@ -145,8 +172,20 @@ class IVFIndex:
         re-cluster, which any unassigned row triggers.)"""
         return self.trained and n >= self.min_rows
 
+    def _refresh_agg(self) -> Tuple[int, int]:
+        """(n_unassigned, max cluster size), recomputed only after a
+        mutation (one O(n) pass, amortized with the lazy CSR rebuild) —
+        steady-state queries read the cache."""
+        if self._agg_stale:
+            a = self._assign[:self._n]
+            sz = np.bincount(a[a >= 0], minlength=self.n_clusters)
+            self._agg = (int((a == -1).sum()),
+                         int(sz.max()) if sz.size else 0)
+            self._agg_stale = False
+        return self._agg
+
     def n_unassigned(self) -> int:
-        return int((self._assign[:self._n] == -1).sum())
+        return self._refresh_agg()[0]
 
     def sizes(self) -> np.ndarray:
         """(C,) rows currently assigned per cluster."""
@@ -162,7 +201,8 @@ class IVFIndex:
                 "drift": self._drift,
                 "n_train_batches": self.n_train_batches,
                 "n_reclusters": self.n_reclusters,
-                "n_reseeds": self.n_reseeds}
+                "n_reseeds": self.n_reseeds,
+                "n_grows": self.n_grows}
 
     def ensure_capacity(self, cap: int) -> None:
         if cap <= len(self._assign):
@@ -251,6 +291,7 @@ class IVFIndex:
             self._dirty_during[rows] = True
         self._n = n_after
         self._csr_stale = True
+        self._agg_stale = True
 
     def on_delete(self, row: int, last: int) -> None:
         """Mirror the store's swap-with-last compaction: the last row's
@@ -264,6 +305,7 @@ class IVFIndex:
             self._dirty_during[last] = False  # slot is dead, not mutated
         self._n = last
         self._csr_stale = True
+        self._agg_stale = True
 
     # -- posting lists -------------------------------------------------------
 
@@ -315,32 +357,89 @@ class IVFIndex:
 
     # -- re-clustering -------------------------------------------------------
 
+    def target_clusters(self, n: Optional[int] = None) -> int:
+        """The codebook size the index wants at ``n`` rows: ~sqrt(n),
+        never below the current C (no shrinking) and capped at
+        ``max_clusters``."""
+        n = self._n if n is None else n
+        return int(np.clip(round(np.sqrt(max(n, 0))), self.n_clusters,
+                           self.max_clusters))
+
+    def wants_growth(self) -> bool:
+        """Auto-grow trigger: sqrt(n) has run ``grow_trigger`` ahead of the
+        current C (hysteresis — growing on every insert would churn the
+        codebook; converging within grow_trigger of sqrt(n) keeps the
+        probed fraction sub-linear without thrashing)."""
+        return (self.auto_grow and self.trained
+                and self.n_clusters < self.max_clusters
+                and self.target_clusters() >=
+                self.grow_trigger * self.n_clusters)
+
     def needs_recluster(self) -> bool:
-        """Unassigned rows (inserted pre-training), posting imbalance, or
-        accumulated centroid drift since the last full re-assignment."""
+        """Unassigned rows (inserted pre-training), posting imbalance,
+        accumulated centroid drift since the last full re-assignment, or a
+        pending codebook growth step (auto_grow)."""
         if not self.trained or self._n == 0 or self._recluster_active:
             return False
         if self.n_unassigned():
+            return True
+        if self.wants_growth():
             return True
         if self._drift > self.drift_threshold:
             return True
         if self._n >= 4 * self.n_clusters:
             mean = self._n / self.n_clusters
-            mx = int(self.sizes().max())
+            mx = self._refresh_agg()[1]  # cached: no O(n) pass per query
             if mx > self.imbalance_factor * mean and (
                     self._post_recluster_max is None or
                     mx > 1.25 * self._post_recluster_max):
                 return True
         return False
 
+    def _grow_clusters_locked(self, new_c: int, dense: np.ndarray) -> None:
+        """Append ``new_c - C`` centroids, seeded from rows of the heaviest
+        clusters (splitting their mass is where finer cells pay off; a
+        cluster-less fallback draws uniformly). Under the store lock, O(C):
+        existing assignments stay valid (values only ever < the OLD C), so
+        posting lists and ``_assign`` remain bit-consistent — the follow-up
+        compute/commit phases migrate rows to the new cells."""
+        add = new_c - self.n_clusters
+        assert add > 0, (new_c, self.n_clusters)
+        sizes = self.sizes() if self._n else np.zeros(self.n_clusters,
+                                                      np.int64)
+        rows_csr, offs = self.posting_lists()
+        donors = np.argsort(-sizes)
+        seeds = np.empty((add, self.embed_dim), np.float32)
+        for j in range(add):
+            c = int(donors[j % len(donors)])
+            span = rows_csr[offs[c]:offs[c + 1]]
+            if span.size:
+                row = int(span[self._rng.integers(span.size)])
+            else:
+                row = int(self._rng.integers(max(self._n, 1)))
+            seeds[j] = dense[row]
+        self.centroids = np.concatenate([self.centroids, seeds])
+        self._counts = np.concatenate(
+            [self._counts, np.ones(add, np.int64)])
+        self.n_clusters = new_c
+        self._csr_stale = True   # offsets are (C+1,): the shape changed
+        self._agg_stale = True   # ditto the bincount width
+        self.n_grows += 1
+
     def begin_recluster(self, dense: np.ndarray) -> ReclusterJob:
-        """Phase 1, under the store lock, O(C): reseed dead clusters (and
-        split overfull ones by reseeding the smallest survivors from the
-        overfull clusters' rows), snapshot the centroids, and arm the
-        dirty-during bitmap so the unlocked compute phase can later tell
-        which rows it raced."""
+        """Phase 1, under the store lock, O(C): grow the codebook toward
+        ~sqrt(n) if auto_grow wants it (at most 2x per epoch, so each
+        growth step's O(n*C) compute stays bounded and C converges across
+        epochs), reseed dead clusters (and split overfull ones by
+        reseeding the smallest survivors from the overfull clusters'
+        rows), snapshot the centroids, and arm the dirty-during bitmap so
+        the unlocked compute phase can later tell which rows it raced."""
         assert self.trained and not self._recluster_active
         n = self._n
+        if self.auto_grow:
+            tgt = min(self.target_clusters(n), 2 * self.n_clusters)
+            if tgt > self.n_clusters:
+                self._grow_clusters_locked(tgt, dense)
         if n:
             sizes = self.sizes()
             mean = max(n / self.n_clusters, 1.0)
@@ -372,16 +471,43 @@ class IVFIndex:
     @staticmethod
     def compute_assignments(job: ReclusterJob) -> ReclusterJob:
         """Phase 2, NO locks: the O(n·C) argmin over the copy-on-write dense
-        view at the begin point. Pure w.r.t. index state."""
-        job.new_assign = assign_l2(job.dense[:job.n], job.centroids)
+        view at the begin point, plus one Lloyd mean-update per cluster
+        (segment-sum over the sorted assignment — the re-cluster epoch is
+        then a true Lloyd iteration, which matters most for auto-grown
+        centroids: a freshly grown cell starts as a raw data point and
+        would otherwise never move to its cell's mean, costing probe-
+        ranking recall). Pure w.r.t. index state."""
+        X = job.dense[:job.n]
+        a = assign_l2(X, job.centroids)
+        job.new_assign = a
+        C = len(job.centroids)
+        cnt = np.bincount(a, minlength=C)
+        means = job.centroids.copy()
+        if job.n:
+            order = np.argsort(a, kind="stable")
+            starts = np.zeros(C, np.int64)
+            np.cumsum(cnt[:-1], out=starts[1:])
+            live = cnt > 0
+            sums = np.zeros((C, X.shape[1]), np.float32)
+            sums[live] = np.add.reduceat(X[order], starts[live], axis=0)
+            means[live] = sums[live] / cnt[live, None]
+        job.new_centroids = means
+        job.new_counts = cnt
         return job
 
     def commit_recluster(self, job: ReclusterJob, n_now: int) -> None:
-        """Phase 3, under the store lock: apply the computed assignment to
-        every surviving row the compute window did NOT race (a row mutated
-        mid-compute already holds a fresher assignment from its own hook —
-        the stale argmin result must not clobber it)."""
+        """Phase 3, under the store lock: install the Lloyd-refined
+        centroids and apply the computed assignment to every surviving row
+        the compute window did NOT race (a row mutated mid-compute already
+        holds a fresher assignment from its own hook — the stale argmin
+        result must not clobber it). Mini-batch steps that landed during
+        the compute window are superseded by the full-corpus means; the
+        learning-rate counts restart at the computed cluster mass so later
+        mini-batch nudges stay proportionate."""
         assert self._recluster_active and job.new_assign is not None
+        if job.new_centroids is not None:
+            self.centroids = job.new_centroids
+            self._counts = np.maximum(job.new_counts, 1).astype(np.int64)
         m = min(job.n, n_now)
         keep = ~self._dirty_during[:m]
         self._assign[:m] = np.where(keep, job.new_assign[:m],
@@ -389,6 +515,7 @@ class IVFIndex:
         self._recluster_active = False
         self._drift = 0.0
         self._csr_stale = True
+        self._agg_stale = True
         self._post_recluster_max = int(self.sizes().max()) if self._n else 0
         self.n_reclusters += 1
 
@@ -420,6 +547,11 @@ class IVFIndex:
         assert np.array_equal(a[rows],
                               np.repeat(np.arange(C), sizes)), \
             "CSR grouping disagrees with the assignment"
+        assert self.n_unassigned() == int((a[:n] == -1).sum()), \
+            "cached aggregate stats diverged from the assignment"
+        assert self._refresh_agg()[1] == (int(np.max(np.diff(offsets)))
+                                          if self.n_clusters else 0), \
+            "cached max-cluster-size diverged from the posting lists"
         assert len(rows) + self.n_unassigned() == n
         if uid_rows is not None:
             live = np.sort(np.asarray(uid_rows, np.int64))

@@ -12,6 +12,10 @@ This module is pure numpy + the kernel dispatch: no store state. The store
 glues it to the DeviceBank snapshot (``EmbeddingStore.search_batch``
 ``impl='ivf'``); ``pruned_search_numpy`` is the full-pipeline host oracle
 the parity/recall tests and ``benchmarks/index_scale.py`` compare against.
+On a row-sharded bank ``partition_rows_by_shard`` routes the candidate set
+by shard ownership so each shard scans only its local candidates (see
+``DeviceBank.search_rows``); the routed result must still bit-match this
+module's single-slab oracle.
 """
 from __future__ import annotations
 
@@ -62,6 +66,36 @@ def build_candidate_rows(csr_rows: np.ndarray, csr_offsets: np.ndarray,
             ids[qi, off:off + len(span)] = span
             off += len(span)
     return ids
+
+
+def partition_rows_by_shard(rows: np.ndarray, rows_per_shard: int,
+                            n_shards: int, *, min_width: int = 1
+                            ) -> Tuple[np.ndarray, np.ndarray]:
+    """Route a global candidate-row set to the bank's row shards: the bank
+    partitions rows contiguously (shard ``s`` owns global rows
+    ``[s*rows_per_shard, (s+1)*rows_per_shard)``), so ownership is one
+    integer divide. Returns ``(local (S, M) int32, counts (S,) int32)``:
+    row i of ``local`` holds shard i's candidates as SHARD-LOCAL row
+    indices, valid entries first, padded with 0 (maskable via the kernels'
+    ``n_valid`` = ``counts[i]``). M is the max per-shard candidate count,
+    floored at ``min_width`` and bucketed (``pow2_bucket``) so the
+    downstream per-shard scan retraces O(log) distinct shapes as unions
+    grow. Pure numpy — unit-testable without a multi-device runtime."""
+    from repro.kernels.retrieval_topk.ops import pow2_bucket
+    rows = np.asarray(rows, np.int64).ravel()
+    sid = rows // rows_per_shard
+    assert rows.size == 0 or (0 <= sid.min() and sid.max() < n_shards), \
+        (rows_per_shard, n_shards, "candidate row outside the sharded slab")
+    counts = np.bincount(sid, minlength=n_shards).astype(np.int32)
+    M = pow2_bucket(int(counts.max()) if rows.size else 0, floor=min_width)
+    local = np.zeros((n_shards, M), np.int32)
+    order = np.argsort(sid, kind="stable")
+    sorted_local = (rows - sid * rows_per_shard)[order].astype(np.int32)
+    offs = np.concatenate([[0], np.cumsum(counts)])
+    for s in range(n_shards):
+        span = sorted_local[offs[s]:offs[s + 1]]
+        local[s, :len(span)] = span
+    return local, counts
 
 
 def pruned_search_numpy(dense: np.ndarray, n: int, uids: np.ndarray,

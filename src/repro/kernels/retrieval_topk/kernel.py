@@ -153,8 +153,9 @@ def retrieval_topk_int4_gathered_pallas(
     int4-sized XLA work done by the dispatch wrapper inside the same jit),
     ``row_ids`` (Q, L) the candidates' global slab rows (-1 = padding).
     ``n_valid`` masks ids past the scanned snapshot's fill. Returns
-    ((Q, k) scores, (Q, k) global row ids) — masked slots score -1e30 with
-    id -1."""
+    ((Q, k) scores, (Q, k) global row ids) — dead slots (pad or masked)
+    carry the uniform sentinel pair score -1e30 / id -1, matching the
+    ref/blocked variants."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     Q, L, E2 = gathered.shape
@@ -194,6 +195,9 @@ def retrieval_topk_int4_gathered_pallas(
                         _VMEM((bq, k), jnp.int32)],
         interpret=interpret,
     )(n_arr, query, gathered, gscales, row_ids)
+    # dead-slot contract (shared with ref/blocked): a masked candidate's
+    # real id must not survive next to a sentinel score
+    ids = jnp.where(scores > NEG_INF / 2, ids, -1)
     return scores[:Q], ids[:Q]
 
 

@@ -294,6 +294,20 @@ def _jitted_int4_rows(impl: str, k: int, normalize: bool, kw: tuple):
     return jax.jit(fn)
 
 
+def pow2_bucket(m: int, *, floor: int = 1, refine_above: int = 8192) -> int:
+    """Shape bucket for dynamically-sized candidate sets: the next power of
+    two >= max(m, floor), refined with a 3/4 step above ``refine_above``
+    (scan cost tracks the PADDED size, so a 21k union should not pay for
+    32k rows; still only ~2 traced shapes per octave). Shared by the
+    batch-union scan and the sharded candidate partitioning so both retrace
+    O(log) distinct shapes as unions grow."""
+    m = max(int(m), int(floor), 1)
+    bucket = 1 << (m - 1).bit_length()
+    if bucket >= refine_above and m <= 3 * bucket // 4:
+        bucket = 3 * bucket // 4
+    return bucket
+
+
 def retrieval_topk_int4_rows(query: jax.Array, packed: jax.Array,
                              scales: jax.Array, rows, k: int, *,
                              normalize: bool = False, impl: str = "auto",
@@ -311,12 +325,7 @@ def retrieval_topk_int4_rows(query: jax.Array, packed: jax.Array,
     rows = np.asarray(rows, np.int32).ravel()
     m = rows.size
     assert 0 < k <= m, (k, m)
-    # pow2 buckets, refined with the 3/4 step above 8k (scan cost tracks
-    # the PADDED size, so a 21k union should not pay for 32k rows; still
-    # only ~2 traced shapes per octave)
-    bucket = 1 << (max(m, k) - 1).bit_length()
-    if bucket >= 8192 and max(m, k) <= 3 * bucket // 4:
-        bucket = 3 * bucket // 4
+    bucket = pow2_bucket(m, floor=k)
     if bucket > m:  # pad slots gather row 0 and are masked by n_valid=m
         rows = np.concatenate([rows, np.zeros(bucket - m, np.int32)])
     return _jitted_int4_rows(impl, k, normalize, kwt)(

@@ -60,9 +60,10 @@ def retrieval_topk_int4_gathered_reference(
     ``>= n_valid`` (rows past the snapshot fill, e.g. posting lists newer
     than a stale bank generation) are masked to -1e30; when a query has
     fewer than ``k`` live candidates the trailing outputs keep that
-    sentinel score (callers map them to uid -1). Returned ids are the
-    *global* slab row indices. Materializes the gathered fp32 rows —
-    correctness baseline only."""
+    sentinel score AND id -1 (every impl emits the same (score, id)
+    sentinel pair for a dead slot, so consumers can key off either).
+    Returned live ids are the *global* slab row indices. Materializes the
+    gathered fp32 rows — correctness baseline only."""
     n_arr = jnp.asarray(packed.shape[0] if n_valid is None else n_valid,
                         jnp.int32)
     safe = jnp.clip(row_ids, 0, packed.shape[0] - 1)
@@ -77,6 +78,9 @@ def retrieval_topk_int4_gathered_reference(
     s = jnp.where(live, s, -1e30)
     scores, sel = jax.lax.top_k(s, k)
     ids = jnp.take_along_axis(row_ids.astype(jnp.int32), sel, axis=1)
+    # a selected dead slot (pad or snapshot-masked) may still name a real
+    # row id; normalize to the -1 sentinel so (score, id) stays paired
+    ids = jnp.where(scores > -5e29, ids, -1)
     return scores, ids
 
 
@@ -122,6 +126,9 @@ def retrieval_topk_int4_gathered_blocked(
     init = (jnp.full((Q, k), -1e30, jnp.float32),
             jnp.full((Q, k), -1, jnp.int32))
     (scores, ids), _ = jax.lax.scan(body, init, ids3)
+    # same dead-slot contract as the reference: sentinel scores pair with
+    # id -1 even when top_k surfaced a masked candidate's real id
+    ids = jnp.where(scores > -5e29, ids, -1)
     return scores, ids
 
 

@@ -31,7 +31,7 @@ def build_service(spec, *, n_train: int = 256, seed: int = 0, policy="recall",
                   search_devices=None, bank_refresh="sync",
                   bank_max_lag_rows=None, bank_max_lag_ms=None,
                   index="none", index_clusters=64, index_min_rows=None,
-                  nprobe=None):
+                  nprobe=None, index_auto_grow=False):
     """Train the pre-exit predictor from self-supervised labels, then stand up
     the embedding + query engines."""
     cfg, recall = spec.model, spec.recall
@@ -66,7 +66,8 @@ def build_service(spec, *, n_train: int = 256, seed: int = 0, policy="recall",
                         bank_max_lag_rows=bank_max_lag_rows,
                         bank_max_lag_ms=bank_max_lag_ms,
                         index=index, index_clusters=index_clusters,
-                        index_min_rows=index_min_rows, nprobe=nprobe)
+                        index_min_rows=index_min_rows, nprobe=nprobe,
+                        index_auto_grow=index_auto_grow)
     return engine, query, {"predictor": stats, "labels": np.asarray(labels)}
 
 
@@ -87,7 +88,8 @@ def main():
                     help="store scan backend; 'device' keeps the int4 slab "
                          "resident on device (auto picks it on accelerators) "
                          "and shards it across --search-shards devices; "
-                         "'ivf' forces the pruned coarse-filter scan "
+                         "'ivf' forces the pruned coarse-filter scan, "
+                         "shard-routed when the bank spans devices "
                          "(needs --index ivf; on accelerators auto picks "
                          "it past --index-min-rows, on CPU only this "
                          "explicit choice uses it)")
@@ -121,6 +123,11 @@ def main():
     ap.add_argument("--nprobe", type=int, default=None,
                     help="IVF clusters probed per query (default: the "
                          "index's 8; higher = better recall, more scan)")
+    ap.add_argument("--index-auto-grow", action="store_true",
+                    help="grow the IVF cluster count toward ~sqrt(n) "
+                         "across re-cluster epochs instead of pinning the "
+                         "--index-clusters choice (keeps the probed "
+                         "fraction sub-linear as the store scales)")
     args = ap.parse_args()
 
     spec = get_arch(args.arch)
@@ -138,7 +145,8 @@ def main():
                                         index=args.index,
                                         index_clusters=args.index_clusters,
                                         index_min_rows=args.index_min_rows,
-                                        nprobe=args.nprobe)
+                                        nprobe=args.nprobe,
+                                        index_auto_grow=args.index_auto_grow)
     print(f"predictor: {info['predictor']}")
 
     data = SYN.multimodal_pairs(1, args.n_items, spec.model)

@@ -46,7 +46,8 @@ class QueryEngine:
                  freshness: Optional[str] = None, index: str = "none",
                  index_clusters: int = 64,
                  index_min_rows: Optional[int] = None,
-                 nprobe: Optional[int] = None):
+                 nprobe: Optional[int] = None,
+                 index_auto_grow: bool = False):
         from repro.models import imagebind as IB
         self.params, self.cfg, self.recall = params, cfg, recall
         self.store = store
@@ -67,7 +68,10 @@ class QueryEngine:
         # (attach kwargs win only when we create it here)
         if index == "ivf":
             if store.ivf_index is None:
-                ivf_kw = {"n_clusters": index_clusters}
+                # auto_grow keeps C tracking ~sqrt(n) across re-cluster
+                # epochs instead of pinning the attach-time choice
+                ivf_kw = {"n_clusters": index_clusters,
+                          "auto_grow": index_auto_grow}
                 if index_min_rows is not None:
                     ivf_kw["min_rows"] = index_min_rows
                 if nprobe is not None:

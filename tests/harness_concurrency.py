@@ -18,10 +18,19 @@ Actors (one step per schedule token):
     published snapshot, recording which generation it served.
   * ``C`` — re-clusterer (``ivf=True`` scenarios only): advances an IVF
     re-cluster job by ONE phase — ``ivf_recluster_begin`` (reseed +
-    snapshot under the lock), ``compute_assignments`` (the unlocked
-    O(n·C) argmin), ``ivf_recluster_commit`` — so writers land inside the
-    compute window and the commit must not clobber their fresher
-    assignments.
+    snapshot under the lock; in ``ivf_auto_grow`` scenarios this is also
+    where the codebook grows toward ~sqrt(n)), ``compute_assignments``
+    (the unlocked O(n·C) argmin), ``ivf_recluster_commit`` — so writers
+    land inside the compute window and the commit must not clobber their
+    fresher assignments.
+  * ``A`` — attacher: one ``store.attach_device_bank()`` re-attach,
+    swapping the store's bank for a fresh object with nothing published
+    and every row marked dirty. An in-flight refresh epoch begun on the
+    OLD bank must complete against it (``RefreshEpoch.bank`` pins the
+    target — scattering a partial dirty slice into the fresh bank would
+    publish zeros for every un-scattered row), and the next epoch
+    re-uploads the new bank in full. Generations restart per bank, so all
+    bookkeeping below keys by (bank identity, generation).
 
 ``ivf=True`` scenarios scan ``impl="ivf"`` with ``nprobe = n_clusters``
 (probe everything): the pruned path then covers exactly the assigned rows,
@@ -129,7 +138,8 @@ class ConcurrencyScenario:
                  script: Optional[List[tuple]] = None,
                  max_lag_rows: Optional[int] = None,
                  freshness: Optional[str] = "stale",
-                 ivf: bool = False, ivf_clusters: int = 4):
+                 ivf: bool = False, ivf_clusters: int = 4,
+                 ivf_auto_grow: bool = False):
         rng = np.random.default_rng(seed)
         self.E = embed_dim
         self.k = k
@@ -143,6 +153,7 @@ class ConcurrencyScenario:
         self.freshness = freshness
         self.ivf = ivf
         self.ivf_clusters = ivf_clusters
+        self.ivf_auto_grow = ivf_auto_grow
         self._oracle: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
 
     # -- store / oracle -----------------------------------------------------
@@ -154,10 +165,14 @@ class ConcurrencyScenario:
         if self.ivf:
             # min_rows=1: the auto cutover threshold is irrelevant here —
             # scans force impl="ivf"; nprobe = C probes every cluster so a
-            # fresh scan covers all assigned rows (exhaustive-equivalent)
-            st.attach_ivf(n_clusters=self.ivf_clusters,
-                          nprobe=self.ivf_clusters, min_rows=1,
-                          train_batch=64)
+            # fresh scan covers all assigned rows (exhaustive-equivalent).
+            # Auto-grow scenarios raise C mid-schedule, so probe "all" via
+            # an effectively-infinite nprobe (select_probes clamps to C) —
+            # full coverage must survive the growth for the oracle compare
+            nprobe = 10**6 if self.ivf_auto_grow else self.ivf_clusters
+            st.attach_ivf(n_clusters=self.ivf_clusters, nprobe=nprobe,
+                          min_rows=1, train_batch=64,
+                          auto_grow=self.ivf_auto_grow)
         for m in self.script[:prefix_len]:
             apply_mutation(st, m)
         return st
@@ -212,10 +227,16 @@ class ConcurrencyScenario:
         ref = st.set_bank_refresh("async", max_lag_rows=self.max_lag_rows,
                                   thread=False)
         # establish generation 1 == prefix 0 so the first scans have a
-        # mapped snapshot (the scheduler is the only generation source)
+        # mapped snapshot (the scheduler is the only generation source).
+        # Generations restart at 1 on a re-attached bank, so every map key
+        # is (bank identity, generation) — identities are never reused
         assert ref.refresh_once()
-        bank = st.device_bank
-        gen_to_prefix = {bank.generation: 0}
+
+        def gen_key():
+            b = st.device_bank
+            return (id(b), b.generation)
+
+        gen_to_prefix = {gen_key(): 0}
 
         writes = 0
         epoch = None
@@ -225,12 +246,18 @@ class ConcurrencyScenario:
         c_job = None
         c_phase = 0
         stats = {"scans": 0, "flips": 0, "stale_scans": 0, "reclusters": 0,
-                 "schedule": "".join(tokens)}
+                 "attaches": 0, "schedule": "".join(tokens)}
 
         for t in tokens:
             if t == "W":
                 apply_mutation(st, self.script[writes])
                 writes += 1
+            elif t == "A":
+                # re-attach: fresh bank object, nothing published, every
+                # row re-marked dirty. An in-flight epoch stays pinned to
+                # the OLD bank (RefreshEpoch.bank) and completes there
+                st.attach_device_bank()
+                stats["attaches"] += 1
             elif t == "C":
                 # one IVF re-cluster phase per token: begin (may be a no-op
                 # when nothing triggers) -> unlocked compute -> commit
@@ -262,7 +289,8 @@ class ConcurrencyScenario:
                 else:
                     if epoch is not None:
                         snap = ref.flip(epoch)
-                        gen_to_prefix[snap.generation] = epoch_prefix
+                        gen_to_prefix[(id(epoch.bank),
+                                       snap.generation)] = epoch_prefix
                         self._check_flip(snap, begin_copy)
                         stats["flips"] += 1
                     epoch = None
@@ -274,23 +302,27 @@ class ConcurrencyScenario:
                 # (epochs are strictly serialized — a refresh basing its
                 # shadow on anything but the latest epoch would drop that
                 # epoch's rows; DeviceBank.publish asserts this). Model the
-                # wait deterministically: finish the epoch, then scan.
+                # wait deterministically: finish the epoch, then scan. A
+                # just-re-attached bank (nothing published) always blocks,
+                # whatever the freshness policy.
                 would_block = (self.freshness == "fresh") or (
-                    self.freshness is None and not ref.within_bound())
+                    self.freshness is None and not ref.within_bound()) or (
+                    st.device_bank.published is None)
                 if would_block and epoch is not None:
                     if phase == 1:
                         ref.apply(epoch)
                     snap = ref.flip(epoch)
-                    gen_to_prefix[snap.generation] = epoch_prefix
+                    gen_to_prefix[(id(epoch.bank),
+                                   snap.generation)] = epoch_prefix
                     self._check_flip(snap, begin_copy)
                     stats["flips"] += 1
                     epoch = None
                     phase = 0
-                g0 = bank.generation
+                g0 = gen_key()
                 u, s = st.search_batch(self.queries, self.k,
                                        impl=self._scan_impl,
                                        freshness=self.freshness)
-                g1 = bank.generation
+                g1 = gen_key()
                 if g1 != g0:  # the policy blocked: inline refresh to "now"
                     gen_to_prefix[g1] = writes
                 served = g1
@@ -328,7 +360,7 @@ class ConcurrencyScenario:
             if phase == 1:
                 ref.apply(epoch)
             snap = ref.flip(epoch)
-            gen_to_prefix[snap.generation] = epoch_prefix
+            gen_to_prefix[(id(epoch.bank), snap.generation)] = epoch_prefix
             self._check_flip(snap, begin_copy)
             stats["flips"] += 1
             epoch = None
@@ -346,6 +378,8 @@ class ConcurrencyScenario:
         assert self._scan_equal((u, s), self.oracle(writes)), (
             f"post-drain scan diverged from the oracle under schedule "
             f"{''.join(tokens)!r}")
+        if self.ivf:
+            stats["grows"] = st.ivf_index.n_grows
         return stats
 
     def _check_flip(self, snap, begin_copy) -> None:

@@ -51,6 +51,23 @@ def test_enumerated_interleavings_with_delete_and_policy_bound():
         scen.run_schedule(sched)
 
 
+def test_enumerated_interleavings_with_bank_reattach():
+    """W/R/S schedules with an ``A`` (attach_device_bank re-attach) token:
+    an epoch begun on the old bank must complete against IT
+    (``RefreshEpoch.bank``) — scattering its partial dirty slice into the
+    fresh bank would publish zeros for un-scattered rows — and the next
+    epoch re-uploads the replacement in full; every scan still maps onto
+    exactly one sync-oracle prefix (generations keyed per bank)."""
+    scen = ConcurrencyScenario(freshness="stale")
+    # 8!/(2!3!2!1!) = 1680 distinct schedules; even 140-schedule subsample
+    schedules = enumerate_interleavings({"W": 2, "R": 3, "S": 2, "A": 1},
+                                        stride=12)
+    assert len(schedules) == 140
+    for sched in schedules:
+        stats = scen.run_schedule(sched)
+        assert stats["scans"] == 2 and stats["attaches"] == 1
+
+
 def test_interleaving_count_meets_spec():
     """The harness enumerates at least 50 distinct schedules (acceptance
     floor) and they are genuinely distinct."""

@@ -68,9 +68,11 @@ def test_gathered_topk_matches_numpy_oracle(impl, L, block):
         np.testing.assert_allclose(s[qi][:m],
                                    np.sort(dense[want] @ q[qi])[::-1],
                                    rtol=1e-5, atol=1e-5)
-        if m < k:  # dead slots carry the SCORE sentinel (ids unspecified:
-            # -1 padding or a masked real id — consumers key off the score)
+        if m < k:  # dead slots carry the uniform sentinel PAIR on every
+            # impl: score -1e30 AND id -1 (a masked candidate's real row
+            # id must never survive next to a sentinel score)
             assert (s[qi][m:] <= -1e29).all()
+            assert (ii[qi][m:] == -1).all()
 
 
 def test_gathered_topk_pads_short_candidate_lists():
@@ -84,6 +86,7 @@ def test_gathered_topk_pads_short_candidate_lists():
         jnp.asarray(scales), ids, 4, impl="ref", n_valid=20)
     assert np.asarray(s).shape == (1, 4)
     assert (np.asarray(s)[0, 2:] <= -1e29).all()
+    assert (np.asarray(ii)[0, 2:] == -1).all()
 
 
 # -- index structure ----------------------------------------------------------
@@ -226,9 +229,10 @@ def test_full_nprobe_matches_exhaustive_and_auto_cutover(monkeypatch):
     st.ivf_index.min_rows = 100_000
     assert st._resolve_auto_impl() == "device"
     st.ivf_index.min_rows = 500
-    # ...and a sharded bank vetoes the cutover (no gathered path yet)
+    # ...and a sharded bank cuts over too, now that the pruned scan
+    # shard-routes instead of falling back to the exhaustive sharded scan
     st._bank.n_shards = 2
-    assert st._resolve_auto_impl() == "device"
+    assert st._resolve_auto_impl() == "ivf"
     st._bank.n_shards = 1
 
 
@@ -329,6 +333,341 @@ def test_enumerated_ivf_recluster_interleavings():
         total["reclusters"] += stats["reclusters"]
     assert total["scans"] == len(schedules)
     assert total["reclusters"] > 0  # the C actor actually re-clustered
+
+
+# -- shard routing ------------------------------------------------------------
+
+
+def test_partition_rows_by_shard_routing():
+    from repro.index.pruned_scan import partition_rows_by_shard
+    rows = np.array([0, 5, 9, 10, 31, 17, 39])
+    local, counts = partition_rows_by_shard(rows, 10, 4)
+    assert counts.tolist() == [3, 2, 0, 2]          # shard 2 empty
+    assert local.shape == (4, 4)                     # pow2 width >= max count
+    assert sorted(local[0][:3].tolist()) == [0, 5, 9]
+    assert sorted(local[1][:2].tolist()) == [0, 7]   # 10, 17 -> local
+    assert sorted(local[3][:2].tolist()) == [1, 9]   # 31, 39 -> local
+    assert (local[2] == 0).all()                     # pad, masked by count 0
+    # round-trip: every (shard, local) pair maps back to its global row
+    back = sorted(s * 10 + int(r) for s in range(4)
+                  for r in local[s][:counts[s]])
+    assert back == sorted(rows.tolist())
+    # min_width floors the bucket so per-shard top-k never lacks columns
+    local, counts = partition_rows_by_shard(np.array([3]), 8, 2,
+                                            min_width=16)
+    assert local.shape == (2, 16) and counts.tolist() == [1, 0]
+    # empty candidate set is representable (all shards empty)
+    local, counts = partition_rows_by_shard(np.zeros(0, np.int64), 8, 2)
+    assert counts.tolist() == [0, 0]
+    # uneven mass: everything in the last shard
+    local, counts = partition_rows_by_shard(np.arange(24, 32), 8, 4)
+    assert counts.tolist() == [0, 0, 0, 8]
+    assert sorted(local[3].tolist()) == list(range(8))
+
+
+@pytest.mark.tier2  # 8-device subprocess: slow; `make tier2` runs it
+def test_sharded_pruned_scan_matches_oracle_8way():
+    """The tentpole acceptance sweep: with the 8-way CPU shard override,
+    impl='ivf' on a multi-shard bank routes per shard (NO exhaustive
+    fallback), bit-matches the single-shard pruned scan and the numpy
+    pruned oracle on uid sets — including uneven posting mass across
+    shards, empty-per-shard candidate sets, sentinel padding, and
+    mutations that cross shard boundaries."""
+    from test_device_bank import run_py
+    run_py("""
+        import numpy as np, jax
+        from repro.core.store import EmbeddingStore
+        from repro.index.pruned_scan import pruned_search_numpy, recall_at_k
+        from repro.data.synthetic import clustered_sphere
+        assert len(jax.devices()) == 8
+        rng = np.random.default_rng(0)
+        E = 32
+        data, centers = clustered_sphere(rng, 1500, 12, E)
+        q = (centers[rng.integers(0, len(centers), 6)] +
+             0.2 * rng.standard_normal((6, E))).astype(np.float32)
+
+        def build():
+            st = EmbeddingStore(E, capacity=64)
+            st.attach_ivf(n_clusters=12, nprobe=3, min_rows=1,
+                          train_batch=128)
+            st.add_batch(np.arange(1500), data, np.zeros(1500),
+                         np.ones(1500))
+            return st
+
+        st = build(); st.attach_device_bank(jax.devices())
+        assert st.device_bank.n_shards == 8
+        single = build(); single.attach_device_bank(jax.devices()[:1])
+
+        for strat in ("union", "gathered"):
+            su, ss = st.search_batch(q, 10, impl="ivf", strategy=strat)
+            du, ds = single.search_batch(q, 10, impl="ivf", strategy=strat)
+            np.testing.assert_allclose(np.sort(ss, 1), np.sort(ds, 1),
+                                       atol=1e-4)
+            for a, b in zip(su, du):
+                assert set(a.tolist()) == set(b.tolist()), strat
+        assert st.ivf_fallbacks == 0 and single.ivf_fallbacks == 0
+        dense, n, uids = st._search_snapshot()
+        ou, _ = pruned_search_numpy(dense, n, uids, st.ivf_index, q, 10)
+        gu, _ = st.search_batch(q, 10, impl="ivf", strategy="gathered")
+        for a, b in zip(gu, ou):
+            assert set(a.tolist()) == set(b.tolist())
+
+        # uneven / empty per-shard candidate sets: one probed cluster
+        u1, _ = st.search_batch(q, 5, impl="ivf", nprobe=1)
+        d1, _ = single.search_batch(q, 5, impl="ivf", nprobe=1)
+        for a, b in zip(u1, d1):
+            assert set(a.tolist()) == set(b.tolist())
+
+        # k beyond the probed mass: sentinel padding matches single-shard
+        u2, s2 = st.search_batch(q[:1], 400, impl="ivf", nprobe=1)
+        d2, _ = single.search_batch(q[:1], 400, impl="ivf", nprobe=1)
+        assert (u2 == -1).any() and (s2[u2 == -1] <= -1e29).all()
+        assert np.array_equal(np.sort(u2, 1), np.sort(d2, 1))
+
+        # mutations crossing shard boundaries keep the routed path exact
+        for s_ in (st, single):
+            s_.delete_batch(np.arange(0, 60, 2))
+            s_.add_batch(np.arange(2000, 2100), data[:100] + 0.01,
+                         np.zeros(100), np.ones(100))
+        su, _ = st.search_batch(q, 10, impl="ivf")
+        du, _ = single.search_batch(q, 10, impl="ivf")
+        nu, _ = single.search_batch(q, 10, impl="numpy")
+        assert recall_at_k(su, nu) >= 0.95
+        for a, b in zip(su, du):
+            assert set(a.tolist()) == set(b.tolist())
+        assert st.ivf_fallbacks == 0
+        print("OK sharded pruned")
+    """)
+
+
+# -- stale-snapshot masking parity (union vs gathered) ------------------------
+
+
+def test_union_and_gathered_agree_on_stale_snapshot_after_delete():
+    """The two strategies filter stale-ahead candidates on DIFFERENT sides
+    (union host-side via ``cand < snap.n``, gathered kernel-side via the
+    n_valid mask); exercise the asymmetry directly: deletes recycle rows
+    < snap.n via swap-with-last AND adds append rows >= snap.n, then a
+    stale-freshness scan must (a) agree across strategies, (b) serve
+    recycled rows as their SNAPSHOT (uid, score) pair, (c) never leak a
+    post-snapshot row."""
+    rng = np.random.default_rng(14)
+    data, centers = _clustered(rng, 300, n_centers=5)
+    st = EmbeddingStore(E, capacity=16)
+    st.attach_ivf(n_clusters=5, nprobe=5, min_rows=1, train_batch=64)
+    st.add_batch(np.arange(300), data, np.zeros(300), np.ones(300))
+    ref = st.set_bank_refresh("async", thread=False)
+    assert ref.refresh_once()
+    snap = st.device_bank.published
+    # postings now run ahead of the stale snapshot both ways
+    st.delete_batch(np.arange(0, 40, 2))      # 20 swap-with-last recycles
+    st.add_batch(np.arange(1000, 1030), rng.standard_normal((30, E)),
+                 np.zeros(30), np.ones(30))   # 30 appended rows
+    assert len(st) == 310 and snap.n == 300
+    q = (centers[rng.integers(0, len(centers), 5)] +
+         0.2 * rng.standard_normal((5, E))).astype(np.float32)
+    uu, us = st.search_batch(q, 10, impl="ivf", freshness="stale")
+    gu, gs = st.search_batch(q, 10, impl="ivf", strategy="gathered",
+                             freshness="stale")
+    # full nprobe + same snapshot + same masking semantics -> identical
+    # uid sets per query (the two strategies run different reduction
+    # orders, so scores match to fp tolerance, not bit-for-bit)
+    for a, sa, b, sb in zip(uu, us, gu, gs):
+        assert set(a.tolist()) == set(b.tolist())
+        np.testing.assert_allclose(np.sort(sa), np.sort(sb), atol=1e-5)
+    for u in (uu, gu):
+        # only snapshot-time uids can surface: a row recycled by delete
+        # serves the snapshot content under the snapshot uid (dropped at
+        # the round-2/3 seam by store.contains), and a row appended after
+        # the flip (id >= snap.n) is masked on both strategies
+        assert set(u.ravel().tolist()) <= set(snap.uids.tolist())
+        assert not (u >= 1000).any()
+    st.set_bank_refresh("sync")
+
+
+# -- inline re-cluster serialization ------------------------------------------
+
+
+def test_inline_recluster_jobs_are_serialized():
+    """Two sync-mode query threads both reach ``ivf_maybe_recluster``
+    before taking the store lock; the non-blocking recluster_lock makes a
+    double begin/compute/commit structurally unreachable — pin it: a
+    second driver observes None/False while a job is in flight, and a
+    thread storm commits exactly one job for one armed trigger."""
+    import threading
+    rng = np.random.default_rng(15)
+    data, _ = _clustered(rng, 300)
+    st = EmbeddingStore(E, capacity=16)
+    st.attach_ivf(n_clusters=4, nprobe=4, min_rows=1, train_batch=64)
+    st.add_batch(np.arange(300), data, np.zeros(300), np.ones(300))
+    st.ivf_index._drift = 1.0                  # arm the trigger
+    job = st.ivf_recluster_begin()
+    assert job is not None
+    assert st.ivf_recluster_begin() is None    # lock held -> no second job
+    assert st.ivf_maybe_recluster() is False
+    IVFIndex.compute_assignments(job)
+    st.ivf_recluster_commit(job)
+    assert st.ivf_index.n_reclusters == 1
+    st.ivf_index.check_consistency(len(st), st.rows_of(st.uids()))
+
+    st.ivf_index._drift = 1.0                  # re-arm once
+    before = st.ivf_index.n_reclusters
+    errs = []
+
+    def query_thread():
+        try:  # the sync ivf path pays maintenance inline — all at once
+            st.search_batch(data[:2], 5, impl="ivf")
+        except Exception as e:  # pragma: no cover - failure detail
+            errs.append(e)
+
+    ts = [threading.Thread(target=query_thread) for _ in range(6)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert not errs
+    assert st.ivf_index.n_reclusters == before + 1
+    st.ivf_index.check_consistency(len(st), st.rows_of(st.uids()))
+
+
+# -- async bank re-attach coherence -------------------------------------------
+
+
+def test_async_ivf_query_rebinds_after_bank_reattach(monkeypatch):
+    """A re-attach landing between the snapshot read and the candidate
+    build must not pair the OLD bank's snapshot with the new bank (or one
+    bank's snapshot with another's postings): the store detects the swap
+    under the lock and retries against the new pairing."""
+    rng = np.random.default_rng(17)
+    data, _ = _clustered(rng, 200, n_centers=4)
+    st = EmbeddingStore(E, capacity=16)
+    st.attach_ivf(n_clusters=4, nprobe=4, min_rows=1, train_batch=64)
+    st.add_batch(np.arange(200), data, np.zeros(200), np.ones(200))
+    ref = st.set_bank_refresh("async", thread=False)
+    assert ref.refresh_once()
+    old_bank = st.device_bank
+    calls = {"n": 0}
+    real = ref.snapshot_for_query
+
+    def racing(freshness=None):
+        snap = real(freshness)
+        if calls["n"] == 0:   # swap lands after the snapshot was taken
+            st.attach_device_bank()
+            ref.refresh_once()            # publish the replacement bank
+        calls["n"] += 1
+        return snap
+
+    monkeypatch.setattr(ref, "snapshot_for_query", racing)
+    q = rng.standard_normal((3, E)).astype(np.float32)
+    iu, _ = st.search_batch(q, 10, impl="ivf", freshness="stale")
+    assert calls["n"] >= 2                # first pairing rejected, retried
+    assert st.device_bank is not old_bank
+    monkeypatch.undo()
+    nu, _ = st.search_batch(q, 10, impl="numpy")
+    for a, b in zip(iu, nu):
+        assert set(a.tolist()) == set(b.tolist())
+    st.set_bank_refresh("sync")
+
+
+def test_late_init_trains_from_subsample_and_assigns_all():
+    """An index attached before any rows, whose observe() buffer never
+    fills (huge init_oversample), late-initializes on the first re-cluster
+    job: the in-lock seed pass reads a BOUNDED subsample and the job's
+    unlocked compute phase assigns + Lloyd-refines the full corpus."""
+    rng = np.random.default_rng(19)
+    data, _ = _clustered(rng, 200, n_centers=4)
+    st = EmbeddingStore(E, capacity=16)
+    st.attach_ivf(n_clusters=4, nprobe=4, min_rows=1, train_batch=64,
+                  init_oversample=10**6)   # buffer threshold unreachable
+    st.add_batch(np.arange(200), data, np.zeros(200), np.ones(200))
+    assert not st.ivf_index.trained
+    assert st.ivf_maybe_recluster()
+    assert st.ivf_index.trained and st.ivf_index.n_unassigned() == 0
+    st.ivf_index.check_consistency(len(st), st.rows_of(st.uids()))
+    q = rng.standard_normal((3, E)).astype(np.float32)
+    iu, _ = st.search_batch(q, 10, impl="ivf")
+    nu, _ = st.search_batch(q, 10, impl="numpy")
+    for a, b in zip(iu, nu):
+        assert set(a.tolist()) == set(b.tolist())
+    assert st.ivf_fallbacks == 0
+
+
+# -- auto-growing cluster count -----------------------------------------------
+
+
+def test_auto_grow_tracks_sqrt_n_across_epochs():
+    rng = np.random.default_rng(16)
+    st = EmbeddingStore(E, capacity=64)
+    st.attach_ivf(n_clusters=4, nprobe=10**6, min_rows=1, train_batch=256,
+                  auto_grow=True)
+    data = rng.standard_normal((2500, E)).astype(np.float32)
+    st.add_batch(np.arange(2500), data, np.zeros(2500), np.ones(2500))
+    idx = st.ivf_index
+    assert idx.wants_growth()
+    seen = [idx.n_clusters]
+    for _ in range(20):
+        if not st.ivf_maybe_recluster():
+            break
+        if idx.n_clusters != seen[-1]:
+            seen.append(idx.n_clusters)
+        # posting lists stay bit-consistent with _assign through growth
+        idx.check_consistency(len(st), st.rows_of(st.uids()))
+    # bounded (<= 2x) steps converging on sqrt(2500) = 50
+    assert seen == [4, 8, 16, 32, 50], seen
+    assert idx.n_grows == 4 and not idx.wants_growth()
+    assert int((idx.sizes() > 0).sum()) > 10  # rows migrated to new cells
+    q = rng.standard_normal((4, E)).astype(np.float32)
+    iu, _ = st.search_batch(q, 10, impl="ivf")   # full probe == exhaustive
+    nu, _ = st.search_batch(q, 10, impl="numpy")
+    for a, b in zip(iu, nu):
+        assert set(a.tolist()) == set(b.tolist())
+
+
+def test_auto_grow_off_keeps_attach_time_cluster_count():
+    rng = np.random.default_rng(18)
+    st = EmbeddingStore(E, capacity=64)
+    st.attach_ivf(n_clusters=4, nprobe=4, min_rows=1, train_batch=256)
+    st.add_batch(np.arange(2500),
+                 rng.standard_normal((2500, E)).astype(np.float32),
+                 np.zeros(2500), np.ones(2500))
+    st.ivf_index._drift = 1.0
+    assert st.ivf_maybe_recluster()
+    assert st.ivf_index.n_clusters == 4 and st.ivf_index.n_grows == 0
+
+
+def test_auto_grow_trigger_hysteresis():
+    idx = IVFIndex(E, n_clusters=32, min_rows=1, auto_grow=True)
+    idx.centroids = np.zeros((32, E), np.float32)  # "trained"
+    idx._n = 1600        # sqrt = 40 < 1.5 * 32: within hysteresis, no churn
+    assert idx.target_clusters() == 40 and not idx.wants_growth()
+    idx._n = 2500        # sqrt = 50 >= 48: grow
+    assert idx.wants_growth()
+    idx.max_clusters = 32               # cap wins
+    assert not idx.wants_growth()
+
+
+def test_enumerated_autogrow_reattach_interleavings():
+    """W/R/S/C/A schedules with auto_grow on: the codebook grows mid-
+    schedule while banks are re-attached and epochs land around both —
+    posting-list/assignment consistency is asserted after every token and
+    fresh scans stay bit-identical to the sync oracle."""
+    from harness_concurrency import (ConcurrencyScenario,
+                                     enumerate_interleavings)
+    scen = ConcurrencyScenario(ivf=True, ivf_clusters=4, ivf_auto_grow=True,
+                               freshness="fresh", n_initial=40)
+    # {W:2, R:3, S:1, C:3, A:1}: 10!/(2!3!1!3!1!) = 50400; stride to 126
+    schedules = enumerate_interleavings(
+        {"W": 2, "R": 3, "S": 1, "C": 3, "A": 1}, stride=400)
+    assert len(schedules) == 126
+    total = {"scans": 0, "reclusters": 0, "grows": 0, "attaches": 0}
+    for sched in schedules:
+        stats = scen.run_schedule(sched)
+        for key in total:
+            total[key] += stats[key]
+    assert total["scans"] == len(schedules)
+    assert total["attaches"] == len(schedules)
+    assert total["reclusters"] > 0
+    assert total["grows"] > 0         # growth actually fired mid-schedule
 
 
 # -- statistical recall bound (tier2) ----------------------------------------
